@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md SDry-run tables from the dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt_gb(x) -> str:
+    return f"{x/1e9:.2f}" if isinstance(x, (int, float)) else "-"
+
+
+def report(d: str = "experiments/dryrun", tag: str = "pod1") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(d, f"*__{tag}.json"))):
+        info = json.load(open(path))
+        if info.get("status") != "ok":
+            rows.append(f"| {info['arch']} | {info['shape']} | FAILED {info.get('error','')} |")
+            continue
+        hc = info.get("hlo_cost", {})
+        state_gb = (
+            info.get("param_bytes_per_device", 0)
+            + info.get("opt_bytes_per_device", 0)
+            + info.get("cache_bytes_per_device", 0)
+        )
+        coll = hc.get("coll_count", {})
+        sched = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in sorted(coll.items()))
+        rows.append(
+            f"| {info['arch']} | {info['shape']} | {_fmt_gb(state_gb)} | "
+            f"{hc.get('flops', 0):.2e} | {hc.get('bytes', 0):.2e} | "
+            f"{hc.get('collective_bytes', 0):.2e} | {sched} | "
+            f"{info.get('compile_seconds', 0):.0f}s |"
+        )
+    hdr = (
+        f"state GB/dev = params+optimizer+KV-cache under the resolved shardings; "
+        f"flops/bytes/coll per device per step (loop-aware HLO walk).\n\n"
+        "| arch | shape | state GB/dev | FLOPs/dev | HBM bytes/dev | coll bytes/dev | collective schedule (count) | compile |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    return hdr + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="pod1")
+    args = ap.parse_args()
+    print(report(args.dir, args.tag))

@@ -1,0 +1,182 @@
+"""Benchmarks mirroring the paper's tables/figures (deliverable d).
+
+Fig. 1a  epoch cost per model            -> bench_fig1_epoch_cost
+Fig. 1b  fleet cost scaling vs #chips    -> bench_fig1_fleet_scaling
+Fig. 2/8 resilience curves (steps@rate)  -> bench_fig8_resilience
+Fig. 12  min/mean/max across patterns    -> bench_fig12_spread
+Fig. 13  eFAT vs fixed vs random-merge   -> bench_fig13_comparison
+Fig. 3   constraint sensitivity          -> bench_fig3_constraints
+
+All run on the paper-faithful CPU-scale classifier (see DESIGN.md S2);
+the same eFAT machinery drives the LM archs via LMFATTrainer.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_arch, reduce_config
+from repro.core import (
+    EFAT,
+    EFATConfig,
+    correlated_family,
+    fault_rate_list,
+    gaussian_chip_rates,
+    random_fault_map,
+)
+from repro.core.resilience import measure_resilience
+from repro.train.fat_trainer import ClassifierFATTrainer, LMFATTrainer
+
+Row = tuple[str, float, str]  # (name, us_per_call, derived)
+
+_CACHE: dict = {}
+
+
+def _trainer() -> ClassifierFATTrainer:
+    if "clf" not in _CACHE:
+        _CACHE["clf"] = ClassifierFATTrainer(get_arch("paper-mlp"), pretrain_steps=600)
+    return _CACHE["clf"]
+
+
+def bench_fig1_epoch_cost() -> list[Row]:
+    """Wall time of one epoch (here: 20 steps) of FAT per model family."""
+    rows = []
+    tr = _trainer()
+    fm = random_fault_map(0, 32, 32, 0.1)
+    t0 = time.time()
+    tr.train(fm, 20)
+    dt_mlp = (time.time() - t0) / 20
+    rows.append(("fig1a/paper_mlp_step", dt_mlp * 1e6, "classifier FAT step"))
+
+    lm = LMFATTrainer(reduce_config(get_arch("smollm-135m")), pretrain_steps=5)
+    t0 = time.time()
+    lm.train(random_fault_map(0, 16, 16, 0.1), 10)
+    dt_lm = (time.time() - t0) / 10
+    rows.append(("fig1a/smollm_reduced_step", dt_lm * 1e6, "LM FAT step (reduced)"))
+    return rows
+
+
+def bench_fig1_fleet_scaling() -> list[Row]:
+    """Fleet retraining cost grows linearly with #chips (fixed policy)."""
+    tr = _trainer()
+    fm = random_fault_map(1, 32, 32, 0.1)
+    t0 = time.time()
+    tr.train(fm, 20)
+    per_chip_s = time.time() - t0
+    rows = []
+    for n in (10, 100, 1000):
+        rows.append(
+            (
+                f"fig1b/fleet_{n}chips",
+                per_chip_s * n * 1e6,
+                f"projected: {per_chip_s * n:.1f}s for {n} chips @20 steps each",
+            )
+        )
+    return rows
+
+
+def bench_fig8_resilience() -> list[Row]:
+    """Steps-to-constraint vs fault rate (the resilience curve, Algo 1 rates)."""
+    tr = _trainer()
+    constraint = tr.baseline_accuracy - 0.03
+    rates = fault_rate_list([0.02], max_fr=0.3, max_interval=0.06, step=0.9)
+    t0 = time.time()
+    table = measure_resilience(
+        tr, rates, constraint, array_shape=(32, 32), repeats=3, max_steps=400, seed=0
+    )
+    dt = time.time() - t0
+    _CACHE["table"] = table
+    _CACHE["constraint"] = constraint
+    derived = "; ".join(
+        f"r={r:.3f}:steps[{mn:.0f},{mu:.0f},{mx:.0f}]"
+        for r, mn, mu, mx in zip(
+            table.rates, table.min_steps, table.mean_steps, table.max_steps_stat
+        )
+    )
+    return [("fig8/resilience_curve", dt * 1e6, derived)]
+
+
+def bench_fig12_spread() -> list[Row]:
+    """min/mean/max spread across fault patterns justifies the max-stat."""
+    t = _CACHE.get("table")
+    if t is None:
+        bench_fig8_resilience()
+        t = _CACHE["table"]
+    spread = float(np.mean(t.max_steps_stat - t.min_steps))
+    return [
+        (
+            "fig12/pattern_spread",
+            0.0,
+            f"mean(max-min) across rates = {spread:.1f} steps -> use max bound",
+        )
+    ]
+
+
+def bench_fig3_constraints() -> list[Row]:
+    """Relaxed accuracy constraints need dramatically less retraining."""
+    tr = _trainer()
+    rows = []
+    fm = random_fault_map(7, 32, 32, 0.18)
+    for delta in (0.01, 0.03, 0.08):
+        c = tr.baseline_accuracy - delta
+        t0 = time.time()
+        steps = tr.steps_to_constraint(fm, c, 400)
+        rows.append(
+            (
+                f"fig3/constraint_minus_{delta}",
+                (time.time() - t0) * 1e6,
+                f"steps={steps} @ acc>={c:.3f}",
+            )
+        )
+    return rows
+
+
+def bench_fig13_comparison() -> list[Row]:
+    """The headline table: eFAT vs individual vs fixed vs random-merge on a
+    correlated fleet (20 chips here; examples/fleet_retraining.py runs 100)."""
+    tr = _trainer()
+    if "table" not in _CACHE:
+        bench_fig8_resilience()
+    cfg = EFATConfig(
+        constraint=_CACHE["constraint"], repeats=3, max_steps=400,
+        m_comparisons=6, k_iterations=2, seed=0,
+    )
+    ef = EFAT(tr, cfg)
+    ef.table = _CACHE["table"]
+    fleet = correlated_family(11, 20, 32, 32, base_rate=0.08, idio_rate=0.02)
+    rows = []
+    t0 = time.time()
+    r_efat = ef.run(fleet)
+    rows.append(
+        (
+            "fig13/efat", (time.time() - t0) * 1e6,
+            f"jobs={r_efat.plan.num_jobs} steps={r_efat.total_retraining_steps:.0f} "
+            f"satisfied={r_efat.satisfied_fraction:.2f}",
+        )
+    )
+    for method, kw in (
+        ("individual", {}),
+        ("fixed", dict(steps_per_chip=60)),
+        ("random-merge", {}),
+    ):
+        t0 = time.time()
+        r = ef.run_baseline(fleet, method, **kw)
+        rows.append(
+            (
+                f"fig13/{method}", (time.time() - t0) * 1e6,
+                f"jobs={r.plan.num_jobs} steps={r.total_retraining_steps:.0f} "
+                f"satisfied={r.satisfied_fraction:.2f}",
+            )
+        )
+    return rows
+
+
+ALL = [
+    bench_fig1_epoch_cost,
+    bench_fig1_fleet_scaling,
+    bench_fig8_resilience,
+    bench_fig12_spread,
+    bench_fig3_constraints,
+    bench_fig13_comparison,
+]

@@ -1,0 +1,35 @@
+"""Benchmark harness entry point — one function per paper table plus the
+roofline summary. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    import benchmarks.kernel_bench as kb
+    import benchmarks.paper_tables as pt
+
+    print("name,us_per_call,derived")
+    for fn in pt.ALL + kb.ALL:
+        try:
+            for name, us, derived in fn():
+                print(f'{name},{us:.1f},"{derived}"', flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f'{fn.__name__},-1,"ERROR: {e}"', flush=True)
+
+    # roofline summary (requires dry-run artifacts; skipped gracefully)
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.analyze("experiments/dryrun", "pod1")
+        if rows:
+            print()
+            print(roofline.table(rows))
+    except Exception as e:
+        print(f'roofline,-1,"SKIPPED: {e}"')
+
+
+if __name__ == "__main__":
+    main()

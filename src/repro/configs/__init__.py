@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    cell_skip_reason,
+    get_arch,
+    list_archs,
+    reduce_config,
+    register,
+    valid_cells,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "cell_skip_reason",
+    "get_arch",
+    "list_archs",
+    "reduce_config",
+    "register",
+    "valid_cells",
+]

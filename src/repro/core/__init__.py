@@ -1,0 +1,67 @@
+"""eFAT core: fault maps, systolic mapping, resilience analysis,
+grouping & fusion, and the end-to-end orchestrator (paper Fig. 7)."""
+from repro.core.efat import EFAT, EFATConfig, EFATResult
+from repro.core.faults import (
+    FaultMap,
+    clustered_fault_map,
+    correlated_family,
+    expected_merged_rate,
+    gaussian_chip_rates,
+    merge_fault_maps,
+    overlap_rate,
+    random_fault_map,
+)
+from repro.core.grouping import (
+    RetrainingPlan,
+    fixed_policy_plan,
+    group_and_fuse,
+    individual_plan,
+    random_pair_merge_plan,
+)
+from repro.core.mapping import (
+    apply_fam,
+    expected_weight_loss,
+    fam_permutation,
+    masked_weight,
+    periodic_mask,
+)
+from repro.core.masking import FaultContext, fault_einsum, fault_linear, from_fault_map, healthy
+from repro.core.resilience import (
+    ResilienceTable,
+    ResilienceTable2D,
+    fault_rate_list,
+    measure_resilience,
+)
+
+__all__ = [
+    "EFAT",
+    "EFATConfig",
+    "EFATResult",
+    "FaultMap",
+    "FaultContext",
+    "RetrainingPlan",
+    "ResilienceTable",
+    "ResilienceTable2D",
+    "apply_fam",
+    "clustered_fault_map",
+    "correlated_family",
+    "expected_merged_rate",
+    "expected_weight_loss",
+    "fam_permutation",
+    "fault_einsum",
+    "fault_linear",
+    "fault_rate_list",
+    "fixed_policy_plan",
+    "from_fault_map",
+    "gaussian_chip_rates",
+    "group_and_fuse",
+    "healthy",
+    "individual_plan",
+    "masked_weight",
+    "measure_resilience",
+    "merge_fault_maps",
+    "overlap_rate",
+    "periodic_mask",
+    "random_fault_map",
+    "random_pair_merge_plan",
+]

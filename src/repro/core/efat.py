@@ -1,0 +1,213 @@
+"""The eFAT orchestrator — Steps 1-4 of paper Fig. 7, end to end.
+
+Inputs: a pre-trained model + training data (wrapped in a FATTrainer), a
+user-defined accuracy constraint, and the fleet's fault maps.
+Output: a RetrainingPlan, the fault-aware weights per retraining job, and
+per-chip evaluation — plus the same pipeline run under baseline policies
+for comparison (paper SIV-C).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.faults import FaultMap
+from repro.core.grouping import (
+    RetrainingPlan,
+    fixed_policy_plan,
+    group_and_fuse,
+    individual_plan,
+    random_pair_merge_plan,
+)
+from repro.core.resilience import (
+    ResilienceTable,
+    fault_rate_list,
+    measure_resilience,
+)
+
+__all__ = ["EFATConfig", "EFATResult", "EFAT", "FATTrainerFull"]
+
+
+class FATTrainerFull(Protocol):
+    """Full trainer protocol: resilience probing + consolidated FAT + eval."""
+
+    def steps_to_constraint(
+        self, fault_map: FaultMap, constraint: float, max_steps: int
+    ) -> Optional[int]: ...
+
+    def train(self, fault_map: FaultMap, steps: int) -> Any:
+        """Run FAT for ``steps`` with this (possibly fused) map; return the
+        shipped fault-aware params (already FAP-masked)."""
+        ...
+
+    def evaluate(self, params: Any, fault_map: FaultMap) -> float:
+        """Deployed metric of params on a chip with this fault map."""
+        ...
+
+
+@dataclass
+class EFATConfig:
+    constraint: float
+    # Algo 1
+    max_fr: float = 0.3
+    max_interval: float = 0.05
+    step_ratio: float = 0.5
+    # Step 1 measurement
+    repeats: int = 5
+    max_steps: int = 2000
+    seed: int = 0
+    # Algo 2
+    m_comparisons: int = 8
+    k_iterations: int = 2
+    stat: str = "max"  # paper recommends max bounds (Fig. 12)
+
+
+@dataclass
+class EFATResult:
+    plan: RetrainingPlan
+    table: Optional[ResilienceTable]
+    chip_metrics: dict[int, float]  # chip index -> deployed metric
+    constraint: float
+    wall_seconds: float = 0.0
+
+    @property
+    def satisfied_fraction(self) -> float:
+        if not self.chip_metrics:
+            return 0.0
+        ok = sum(1 for v in self.chip_metrics.values() if v >= self.constraint)
+        return ok / len(self.chip_metrics)
+
+    @property
+    def total_retraining_steps(self) -> float:
+        return self.plan.total_steps
+
+    def summary(self) -> dict:
+        s = self.plan.summary()
+        s.update(
+            satisfied_fraction=self.satisfied_fraction,
+            constraint=self.constraint,
+            mean_metric=float(np.mean(list(self.chip_metrics.values()))) if self.chip_metrics else 0.0,
+            wall_seconds=self.wall_seconds,
+        )
+        return s
+
+
+class EFAT:
+    """End-to-end framework: resilience map -> amounts -> grouping -> FAT."""
+
+    def __init__(self, trainer: FATTrainerFull, config: EFATConfig):
+        self.trainer = trainer
+        self.config = config
+        self.table: Optional[ResilienceTable] = None
+
+    # -- Step 1 ----------------------------------------------------------
+    def build_resilience_table(
+        self,
+        fault_maps: Sequence[FaultMap],
+        progress: Optional[Callable[[str], None]] = None,
+    ) -> ResilienceTable:
+        cfg = self.config
+        rates = fault_rate_list(
+            [fm.fault_rate for fm in fault_maps],
+            max_fr=cfg.max_fr,
+            max_interval=cfg.max_interval,
+            step=cfg.step_ratio,
+        )
+        array_shape = fault_maps[0].shape
+        self.table = measure_resilience(
+            self.trainer,
+            rates,
+            cfg.constraint,
+            array_shape=array_shape,
+            repeats=cfg.repeats,
+            max_steps=cfg.max_steps,
+            seed=cfg.seed,
+            progress=progress,
+        )
+        return self.table
+
+    # -- Steps 2+3 ---------------------------------------------------------
+    def make_plan(self, fault_maps: Sequence[FaultMap]) -> RetrainingPlan:
+        assert self.table is not None, "run build_resilience_table first"
+        return group_and_fuse(
+            fault_maps,
+            self.table,
+            m_comparisons=self.config.m_comparisons,
+            k_iterations=self.config.k_iterations,
+            stat=self.config.stat,
+            seed=self.config.seed,
+        )
+
+    # -- Step 4 ------------------------------------------------------------
+    def execute_plan(
+        self,
+        plan: RetrainingPlan,
+        fault_maps: Sequence[FaultMap],
+        progress: Optional[Callable[[str], None]] = None,
+    ) -> EFATResult:
+        """Run consolidated FAT per job; evaluate each chip with its own map
+        applied on top of the shipped (FAP-masked) weights."""
+        t0 = time.time()
+        chip_metrics: dict[int, float] = {}
+        for g, (fm, chips, steps) in enumerate(
+            zip(plan.fault_maps, plan.links, plan.steps)
+        ):
+            params = self.trainer.train(fm, int(round(steps)))
+            for chip in chips:
+                chip_metrics[chip] = float(
+                    self.trainer.evaluate(params, fault_maps[chip])
+                )
+            if progress:
+                progress(
+                    f"job {g + 1}/{plan.num_jobs}: chips={chips} steps={steps:.0f} "
+                    f"metrics={[f'{chip_metrics[c]:.3f}' for c in chips]}"
+                )
+        return EFATResult(
+            plan=plan,
+            table=self.table,
+            chip_metrics=chip_metrics,
+            constraint=self.config.constraint,
+            wall_seconds=time.time() - t0,
+        )
+
+    # -- convenience: full pipeline + baselines ------------------------------
+    def run(
+        self,
+        fault_maps: Sequence[FaultMap],
+        progress: Optional[Callable[[str], None]] = None,
+    ) -> EFATResult:
+        if self.table is None:
+            self.build_resilience_table(fault_maps, progress=progress)
+        plan = self.make_plan(fault_maps)
+        return self.execute_plan(plan, fault_maps, progress=progress)
+
+    def run_baseline(
+        self,
+        fault_maps: Sequence[FaultMap],
+        method: str,
+        *,
+        steps_per_chip: Optional[float] = None,
+        progress: Optional[Callable[[str], None]] = None,
+    ) -> EFATResult:
+        """Baselines of paper SIV-C: 'fixed' ([8]), 'random-merge' ([16]),
+        'individual' (eFAT without Step 3)."""
+        if method == "fixed":
+            assert steps_per_chip is not None
+            plan = fixed_policy_plan(fault_maps, steps_per_chip)
+        elif method == "random-merge":
+            plan = random_pair_merge_plan(
+                fault_maps,
+                table=self.table if steps_per_chip is None else None,
+                steps_per_job=steps_per_chip,
+                stat=self.config.stat,
+                seed=self.config.seed,
+            )
+        elif method == "individual":
+            assert self.table is not None
+            plan = individual_plan(fault_maps, self.table, stat=self.config.stat)
+        else:
+            raise ValueError(f"unknown baseline {method!r}")
+        return self.execute_plan(plan, fault_maps, progress=progress)

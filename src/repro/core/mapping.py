@@ -1,0 +1,111 @@
+"""Weight-stationary systolic mapping (paper SII-B, Fig. 6).
+
+A GEMM weight ``W[d_in, d_out]`` executes on an (R, C) array as
+ceil(d_in/R) x ceil(d_out/C) stationary tile loads; PE (r, c) hosts
+``W[i*R + r, j*C + c]`` for every tile (i, j). A bypassed (faulty) PE zeroes
+its weight, so the effective mask on W is the fault map's healthy-mask tiled
+periodically:  mask_W[a, b] = ok[a % R, b % C].
+
+Also provides the FAM (SalvageDNN [12]) saliency-driven column-permutation
+baseline: mitigation without retraining.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faults import FaultMap
+
+__all__ = [
+    "periodic_mask",
+    "masked_weight",
+    "fam_permutation",
+    "apply_fam",
+    "expected_weight_loss",
+]
+
+
+def periodic_mask(
+    weight_shape: tuple[int, ...],
+    ok: jax.Array | np.ndarray,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Expand the (R, C) healthy mask to a weight's shape.
+
+    The LAST TWO dims of the weight are the GEMM (d_in, d_out) view; leading
+    dims (e.g. experts, layers) replicate the same chip mask — every tile of
+    every GEMM executes on the same physical array.
+    """
+    ok = jnp.asarray(ok, dtype=dtype)
+    r_, c_ = ok.shape
+    d_in, d_out = weight_shape[-2], weight_shape[-1]
+    if d_in % r_ == 0 and d_out % c_ == 0:
+        m = jnp.tile(ok, (d_in // r_, d_out // c_))
+    else:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (d_in, d_out), 0) % r_
+        cols = jax.lax.broadcasted_iota(jnp.int32, (d_in, d_out), 1) % c_
+        m = ok[rows, cols]
+    return jnp.broadcast_to(m, weight_shape)
+
+
+def masked_weight(w: jax.Array, ok: Optional[jax.Array]) -> jax.Array:
+    """FAP: zero the weights mapped onto faulty PEs."""
+    if ok is None:
+        return w
+    return w * periodic_mask(w.shape, ok, dtype=w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FAM baseline (SalvageDNN [12]) — saliency-driven fault-aware mapping
+# ---------------------------------------------------------------------------
+
+
+def fam_permutation(w: np.ndarray, fm: FaultMap) -> np.ndarray:
+    """Choose an output-column permutation mapping the least-salient weight
+    columns onto the faultiest array columns.
+
+    Column j of W executes on array column ``j % C``; permuting output
+    columns (filters/neurons) re-routes them. Greedy assignment: weight
+    columns sorted by saliency (sum |W[:, j]|) ascending are assigned to
+    column-slots sorted by per-slot fault count descending.
+
+    Returns ``perm`` with semantics: logical output j is computed in
+    physical slot ``perm[j]``.
+    """
+    d_out = w.shape[-1]
+    cols = fm.shape[1]
+    w2 = np.asarray(w).reshape(-1, d_out)
+    saliency = np.abs(w2).sum(axis=0)  # per logical output column
+    # faults a physical slot experiences = column fault count of (slot % C)
+    col_faults = fm.faulty.sum(axis=0)  # (C,)
+    slot_faults = np.array([col_faults[j % cols] for j in range(d_out)])
+    slots_by_faults = np.argsort(-slot_faults, kind="stable")  # worst first
+    logical_by_saliency = np.argsort(saliency, kind="stable")  # least salient first
+    perm = np.empty(d_out, dtype=np.int64)
+    perm[logical_by_saliency] = slots_by_faults
+    return perm
+
+
+def apply_fam(
+    w: jax.Array, ok: jax.Array, perm: np.ndarray | jax.Array
+) -> jax.Array:
+    """Effective FAM weight: permute columns into slots, mask, un-permute.
+
+    out[:, j] = (W[:, j] placed in slot perm[j], masked there)
+    """
+    perm = jnp.asarray(perm)
+    w_slots = jnp.zeros_like(w).at[..., perm].set(w)  # slot s holds logical perm^-1(s)
+    w_slots = masked_weight(w_slots, ok)
+    return w_slots[..., perm]  # back to logical order
+
+
+def expected_weight_loss(weight_shape: tuple[int, int], fm: FaultMap) -> float:
+    """Fraction of weight entries zeroed by FAP for this (shape, map)."""
+    d_in, d_out = weight_shape
+    reps_r = np.bincount(np.arange(d_in) % fm.shape[0], minlength=fm.shape[0])
+    reps_c = np.bincount(np.arange(d_out) % fm.shape[1], minlength=fm.shape[1])
+    hits = reps_r @ fm.faulty.astype(np.int64) @ reps_c
+    return float(hits) / float(d_in * d_out)

@@ -1,0 +1,170 @@
+"""Fault-context plumbing: how a chip's fault map reaches every matmul.
+
+Model layers never materialize full-weight masks; they call
+``fault_linear(x, w, ctx)`` which applies the periodic systolic mask
+on the fly (or via the fused Pallas kernel on TPU). ``FaultContext`` is a
+pytree so it can be passed through jit/pjit boundaries; the (R, C) healthy
+mask is a tiny replicated constant.
+
+Modes
+-----
+none    : healthy chip — plain matmul, zero overhead.
+fap     : Fault-Aware Pruning semantics — weights on faulty PEs are zeroed
+          in the forward pass; gradients are masked automatically by the
+          chain rule (= FAP+T when training).
+pallas  : same semantics, mask fused into the Pallas masked-matmul kernel
+          (TPU target; falls back to 'fap' math on CPU backends).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faults import FaultMap
+from repro.core.mapping import masked_weight
+
+__all__ = ["FaultContext", "fault_linear", "fault_einsum", "healthy", "from_fault_map"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class FaultContext:
+    """Carries the chip's healthy mask (1=healthy PE, 0=faulty) + mode."""
+
+    ok: Optional[jax.Array]  # (R, C) float mask or None
+    mode: str = "none"  # none | fap | pallas
+
+    def tree_flatten(self):
+        return (self.ok,), self.mode
+
+    @classmethod
+    def tree_unflatten(cls, mode, children):
+        return cls(ok=children[0], mode=mode)
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "none" and self.ok is not None
+
+
+def healthy() -> FaultContext:
+    return FaultContext(ok=None, mode="none")
+
+
+def from_fault_map(
+    fm: Optional[FaultMap], mode: str = "fap", dtype=jnp.float32
+) -> FaultContext:
+    if fm is None:
+        return healthy()
+    return FaultContext(ok=jnp.asarray(fm.ok_mask, dtype=dtype), mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# The masked-GEMM entry points used by every model layer
+# ---------------------------------------------------------------------------
+
+
+def fault_linear(
+    x: jax.Array,
+    w: jax.Array,
+    ctx: Optional[FaultContext] = None,
+    *,
+    precision=None,
+) -> jax.Array:
+    """y = x @ mask(w). ``w`` is (..., d_in, d_out); contraction over -1 of x.
+
+    In 'pallas' mode on a TPU backend the fused kernel is used; everywhere
+    else the mask is applied with XLA ops (the paper-faithful formulation).
+    Weights are cast to the activation dtype (bf16 compute, fp32 master).
+    """
+    w = w.astype(x.dtype)
+    if ctx is None or not ctx.active:
+        return jnp.matmul(x, w, precision=precision)
+    if ctx.mode == "pallas" and jax.default_backend() == "tpu":
+        from repro.kernels.masked_matmul import ops as mm_ops
+
+        return mm_ops.masked_matmul(x, w, ctx.ok)
+    return jnp.matmul(x, masked_weight(w, ctx.ok), precision=precision)
+
+
+def fault_einsum(
+    spec: str,
+    x: jax.Array,
+    w: jax.Array,
+    ctx: Optional[FaultContext] = None,
+    *,
+    precision=None,
+) -> jax.Array:
+    """Masked einsum for weights whose GEMM view is the last two dims of w
+    (e.g. MoE experts '(e,d,f)' — every expert GEMM runs on the same chip,
+    hence the same periodic mask)."""
+    w = w.astype(x.dtype)
+    if ctx is None or not ctx.active:
+        return jnp.einsum(spec, x, w, precision=precision)
+    return jnp.einsum(spec, x, masked_weight(w, ctx.ok), precision=precision)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level helpers
+# ---------------------------------------------------------------------------
+
+# Param leaves that flow through fault_linear/fault_einsum (i.e. execute as
+# GEMMs on the systolic array). Embedding lookups, depthwise convs, SSM
+# A/D tensors and 1-D scales are NOT array-mapped and must not be masked.
+MASKABLE_KEYS = frozenset(
+    {
+        "wq", "wk", "wv", "wo",  # attention projections
+        "wg", "wu", "wd", "wi",  # MLP / expert FFNs
+        "router",
+        "in_proj", "x_proj", "dt_w", "out_proj",  # SSM GEMMs
+        "frontend", "lm_head",
+    }
+)
+
+
+def mask_selected_params(params: Any, ctx: FaultContext) -> Any:
+    """Apply the FAP mask ONCE to every array-mapped weight leaf.
+
+    Because masking is linear and idempotent, pre-masking the params and
+    running the model with a healthy context is mathematically identical to
+    masking inside every matmul (the paper-faithful formulation) — but it
+    touches each weight once per step instead of once per use per
+    microbatch. Tied embeddings are intentionally excluded: the lookup must
+    see unmasked rows; the tied unembed GEMM keeps its use-site mask.
+    """
+    if not ctx.active:
+        return params
+
+    def f(path, leaf):
+        keys = {getattr(k, "key", None) for k in path}
+        if keys & MASKABLE_KEYS and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            return masked_weight(leaf, ctx.ok.astype(leaf.dtype))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def mask_params(params: Any, ctx: FaultContext, is_mapped=None) -> Any:
+    """Apply FAP masks to every array-mapped leaf of a param pytree.
+
+    ``is_mapped(path, leaf) -> bool`` decides which leaves map onto the
+    array; default: every float leaf with ndim >= 2.
+    """
+    if not ctx.active:
+        return params
+
+    def default_is_mapped(path, leaf):
+        return hasattr(leaf, "ndim") and leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating)
+
+    pred = is_mapped or default_is_mapped
+
+    def f(path, leaf):
+        if pred(path, leaf):
+            return masked_weight(leaf, ctx.ok.astype(leaf.dtype))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, params)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+masked_matmul   — the paper's FAP operator fused into the MXU feed
+flash_attention — blocked online-softmax attention (causal/SWA/GQA)
+mamba_scan      — chunked selective scan with VMEM-resident state
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper w/ CPU fallback), ref.py (pure-jnp oracle used by tests).
+"""

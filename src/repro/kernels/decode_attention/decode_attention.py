@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: decode attention over an int8-quantized KV cache.
+
+Decode is memory-bound on every assigned arch (EXPERIMENTS.md §Roofline):
+the per-token cost is dominated by streaming the KV cache through HBM.
+Storing KV as int8 with per-(head, position) scales halves that traffic —
+but only if the dequantize happens in VMEM between the DMA and the MXU;
+an XLA-level dequant materializes a bf16 copy and makes traffic WORSE
+(int8 read + bf16 write + bf16 read). This kernel fuses it:
+
+grid (B*Hq, S/bkv), kv innermost; each step DMAs an int8 (bkv, D) block +
+its (bkv,) scales, dequantizes in VMEM, and runs the online-softmax
+update. q (one token, padded to 8 sublanes) stays resident.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -1e30
+
+
+def _kernel(
+    len_ref,  # scalar prefetch: (1,) int32 valid kv length
+    q_ref,  # (1, bq, d)
+    k_ref,  # (1, bkv, d) int8
+    ks_ref,  # (1, bkv) f32
+    v_ref,
+    vs_ref,
+    o_ref,  # (1, bq, d)
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    nk: int,
+    bq: int,
+    bkv: int,
+    scale: float,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = len_ref[0]
+    kv_start = ik * bkv
+
+    @pl.when(kv_start < valid)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None]  # dequant in VMEM
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bkv)
+        cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(cols < valid, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True), l_ref.shape
+        )
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hq_per_kv", "scale", "bq", "bkv", "interpret"),
+)
+def decode_attention_pallas(
+    q: jax.Array,  # (B*Hq, bq, D) — bq = padded single-token rows
+    k_i8: jax.Array,  # (B*Hkv, S, D) int8
+    k_scale: jax.Array,  # (B*Hkv, S) f32
+    v_i8: jax.Array,
+    v_scale: jax.Array,
+    kv_valid_len: jax.Array,  # (1,) int32
+    *,
+    hq_per_kv: int,
+    scale: Optional[float] = None,
+    bq: int = 8,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, bq_, d = q.shape
+    skv = k_i8.shape[1]
+    assert bq_ == bq and skv % bkv == 0
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    nk = skv // bkv
+    grid = (bh, nk)
+
+    # index maps receive the scalar-prefetch ref as a trailing argument
+    q_map = lambda h, k_, len_ref: (h, 0, 0)
+    kv_map = lambda h, k_, len_ref: (h // hq_per_kv, k_, 0)
+    s_map = lambda h, k_, len_ref: (h // hq_per_kv, k_)
+
+    kernel = functools.partial(_kernel, nk=nk, bq=bq, bkv=bkv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,  # kv_valid_len rides ahead of the DMAs
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, d), q_map),
+                pl.BlockSpec((1, bkv, d), kv_map),
+                pl.BlockSpec((1, bkv), s_map),
+                pl.BlockSpec((1, bkv, d), kv_map),
+                pl.BlockSpec((1, bkv), s_map),
+            ],
+            out_specs=pl.BlockSpec((1, bq, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((bq, d), jnp.float32),
+                pltpu.VMEM((bq, LANES), jnp.float32),
+                pltpu.VMEM((bq, LANES), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, bq, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kv_valid_len, q, k_i8, k_scale, v_i8, v_scale)

@@ -1,0 +1,61 @@
+"""jit'd wrapper: quantize a KV cache to int8 and run decode attention.
+
+On non-TPU backends falls back to the dequantize+attend reference (whose
+XLA lowering is exactly the materialized-dequant cost the kernel removes —
+see the kernel docstring and EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    dequantize_kv_ref,
+    quantize_kv_ref,
+)
+
+quantize_kv = quantize_kv_ref
+dequantize_kv = dequantize_kv_ref
+
+
+def decode_attention(
+    q: jax.Array,  # (B, Hq, 1, D)
+    k_i8: jax.Array,  # (B, Hkv, S, D) int8
+    k_scale: jax.Array,  # (B, Hkv, S)
+    v_i8: jax.Array,
+    v_scale: jax.Array,
+    kv_valid_len,
+    *,
+    scale: Optional[float] = None,
+    bkv: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return decode_attention_ref(
+                q, k_i8, k_scale, v_i8, v_scale,
+                kv_valid_len=kv_valid_len, scale=scale,
+            )
+        interpret = False
+
+    b, hq, sq, d = q.shape
+    hkv, skv = k_i8.shape[1], k_i8.shape[2]
+    group = hq // hkv
+    bq = 8  # TPU sublane minimum; decode q is 1 row padded
+    qf = jnp.pad(q.reshape(b * hq, sq, d), ((0, 0), (0, bq - sq), (0, 0)))
+    pad_kv = (-skv) % bkv
+    kf = jnp.pad(k_i8.reshape(b * hkv, skv, d), ((0, 0), (0, pad_kv), (0, 0)))
+    vf = jnp.pad(v_i8.reshape(b * hkv, skv, d), ((0, 0), (0, pad_kv), (0, 0)))
+    ksf = jnp.pad(k_scale.reshape(b * hkv, skv), ((0, 0), (0, pad_kv)))
+    vsf = jnp.pad(v_scale.reshape(b * hkv, skv), ((0, 0), (0, pad_kv)))
+    valid = jnp.asarray(kv_valid_len, jnp.int32).reshape(1)
+
+    o = decode_attention_pallas(
+        qf, kf, ksf, vf, vsf, valid,
+        hq_per_kv=group, scale=scale, bq=bq, bkv=min(bkv, kf.shape[1]),
+        interpret=interpret,
+    )
+    return o[:, :sq].reshape(b, hq, sq, d)

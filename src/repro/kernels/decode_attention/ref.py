@@ -1,0 +1,47 @@
+"""Oracle for int8-KV decode attention: dequantize + full attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def quantize_kv_ref(k: jax.Array):
+    """Per-(head, position) symmetric int8 quantization.
+
+    k: (B, Hkv, S, D) -> (int8 values, f32 scales (B, Hkv, S))."""
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv_ref(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def decode_attention_ref(
+    q, k_i8, k_scale, v_i8, v_scale, *, kv_valid_len=None, scale=None
+):
+    """q: (B, Hq, 1, D) against an int8 KV cache. Non-causal over the valid
+    prefix (decode semantics: every cached token is in the past)."""
+    k = dequantize_kv_ref(k_i8, k_scale)
+    v = dequantize_kv_ref(v_i8, v_scale)
+    if kv_valid_len is not None:
+        skv = k.shape[2]
+        mask = jnp.arange(skv) < kv_valid_len
+        # hide unwritten slots from the softmax by zeroing post-hoc: do it
+        # with a large negative bias inside a dense attention
+        b, hq, sq, d = q.shape
+        hkv = k.shape[1]
+        group = hq // hkv
+        qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) * (
+            scale if scale is not None else 1.0 / (d**0.5)
+        )
+        s = jnp.where(mask[None, None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+        return o.reshape(b, hq, sq, d).astype(q.dtype)
+    return attention_ref(q, k, v, causal=False, window=None, scale=scale)

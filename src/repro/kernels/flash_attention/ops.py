@@ -1,0 +1,80 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Takes (B, H, S, D) layouts, flattens batch x heads for the kernel's
+index-map GQA arithmetic, pads q rows for short decode queries, and falls
+back to the jnp reference on non-TPU backends (unless interpret is forced).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return attention_ref(
+                q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+            )
+        interpret = False
+
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+
+    bq_ = min(bq, sq)
+    pad_q = (-sq) % max(bq_, 8)
+    bq_ = min(max(bq_, 8), sq + pad_q)
+    bkv_ = min(bkv, skv)
+    pad_kv = (-skv) % bkv_
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        # pad keys at the END; causal masking vs real rows keeps them dead
+        # only when padded cols are masked -> extend window mask via NEG_INF
+        # by flagging them with q_offset arithmetic is not possible, so we
+        # instead mask by making padded keys unreachable: they sit at
+        # positions >= skv and every real row r has r < skv, so causal
+        # masking kills them. Non-causal callers must pass aligned skv.
+        assert causal, "non-causal attention requires skv % bkv == 0"
+        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+
+    o = flash_attention_pallas(
+        qf,
+        kf,
+        vf,
+        hq_per_kv=group,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        scale=scale,
+        bq=bq_,
+        bkv=bkv_,
+        interpret=interpret,
+    )
+    if pad_q:
+        o = o[:, :sq]
+    return o.reshape(b, hq, sq, d)

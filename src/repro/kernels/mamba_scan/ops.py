@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the selective scan kernel; falls back to the
+lax.scan reference off-TPU. The model layer calls this for train/prefill and
+``selective_step_ref`` for single-token decode."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba_scan.mamba_scan import selective_scan_pallas
+from repro.kernels.mamba_scan.ref import selective_scan_ref, selective_step_ref
+
+
+def selective_scan(u, dt, a, b, c, d, *, bd: int = 256, bl: int = 128, interpret=None):
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return selective_scan_ref(u, dt, a, b, c, d)
+        interpret = False
+    dim, length = u.shape[2], u.shape[1]
+    bd_ = bd if dim % bd == 0 else dim
+    bl_ = bl if length % bl == 0 else length
+    return selective_scan_pallas(u, dt, a, b, c, d, bd=bd_, bl=bl_, interpret=interpret)
+
+
+selective_step = selective_step_ref

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+State recurrence per (batch b, channel d):
+    h_t = exp(dt_t * A_d) * h_{t-1} + (dt_t * u_t) * B_t
+    y_t = <C_t, h_t> + D_d * u_t
+with h in R^N, A_d in R^N (negative), B_t/C_t in R^N shared across channels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, a, b, c, d, h0=None):
+    """u, dt: (B, L, D); a: (D, N); b, c: (B, L, N); d: (D,).
+
+    Returns (y: (B, L, D), h_final: (B, D, N)). Computed in fp32.
+    """
+    bsz, length, dim = u.shape
+    n = a.shape[1]
+    u32, dt32 = u.astype(jnp.float32), dt.astype(jnp.float32)
+    a32, b32, c32 = a.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32)
+    h = jnp.zeros((bsz, dim, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp  # (B,D) (B,D) (B,N) (B,N)
+        da = jnp.exp(dt_t[..., None] * a32[None])  # (B, D, N)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(u32, 1, 0),
+        jnp.moveaxis(dt32, 1, 0),
+        jnp.moveaxis(b32, 1, 0),
+        jnp.moveaxis(c32, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u32 * d.astype(jnp.float32)[None, None, :]
+    return y.astype(u.dtype), h
+
+
+def selective_step_ref(h, u_t, dt_t, a, b_t, c_t, d):
+    """One decode step. h: (B, D, N); u_t, dt_t: (B, D); b_t, c_t: (B, N)."""
+    da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * a.astype(jnp.float32)[None])
+    h = da * h + (dt_t * u_t).astype(jnp.float32)[..., None] * b_t.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32)) + u_t * d[None, :]
+    return y.astype(u_t.dtype), h

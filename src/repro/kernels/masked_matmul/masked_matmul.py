@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fault-masked matmul (the FAP operator, fused).
+
+TPU-native design (DESIGN.md S2/S6): the (R, C) healthy mask is periodic
+over the weight, so one small VMEM-resident block serves EVERY weight tile.
+The mask multiply happens in VMEM between the weight DMA and the MXU feed —
+no masked weight copy is ever materialized in HBM, unlike the naive
+``(w * mask) @ x`` which costs an extra full-weight HBM read + write.
+
+Blocking: grid (M/bm, N/bn, K/bk) with K innermost (reduction, 'arbitrary'
+semantics); fp32 accumulator in VMEM scratch; block shapes multiples of the
+(8/16, 128) tile and sized so x, w, mask, acc fit VMEM comfortably
+(default 512x512x512 blocks: 512*512*4B * 4 buffers ~ 4 MiB << 16 MiB VMEM).
+
+Mask block resolution (rows; cols symmetric):
+  bk <= R  -> mask block rows = bk, periodic index_map k % (R/bk)
+  bk >  R  -> mask block rows = R, index 0, in-kernel tile by bk/R
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mask_axis_plan(block: int, period: int):
+    """Returns (mask_block, index_fn, tile_factor) for one axis."""
+    if block <= period:
+        if period % block:
+            raise ValueError(f"array period {period} must be a multiple of block {block}")
+        n = period // block
+        return block, (lambda g: g % n), 1
+    if block % period:
+        raise ValueError(f"block {block} must be a multiple of array period {period}")
+    return period, (lambda g: 0), block // period
+
+
+def _kernel(x_ref, w_ref, ok_ref, o_ref, acc_ref, *, nk: int, tile_r: int, tile_c: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mask = ok_ref[...]
+    if tile_r > 1 or tile_c > 1:
+        mask = jnp.tile(mask, (tile_r, tile_c))
+    w = w_ref[...] * mask.astype(w_ref.dtype)
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def masked_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    ok: jax.Array,
+    *,
+    bm: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[M, N] = x[M, K] @ (w[K, N] * periodic(ok[R, C])).
+
+    Shapes must be multiples of the block sizes (ops.py pads otherwise).
+    """
+    (m, kdim), (k2, n) = x.shape, w.shape
+    assert kdim == k2, (x.shape, w.shape)
+    r, c = ok.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    if m % bm or n % bn or kdim % bk:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by blocks ({bm},{bk},{bn})")
+    out_dtype = out_dtype or x.dtype
+
+    mask_br, row_idx, tile_r = _mask_axis_plan(bk, r)
+    mask_bc, col_idx, tile_c = _mask_axis_plan(bn, c)
+
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(
+        _kernel, nk=grid[2], tile_r=tile_r, tile_c=tile_c
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((mask_br, mask_bc), lambda i, j, k: (row_idx(k), col_idx(j))),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w, ok)

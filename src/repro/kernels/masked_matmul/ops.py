@@ -1,0 +1,63 @@
+"""jit'd public wrapper for the fault-masked matmul kernel.
+
+Handles arbitrary leading batch dims, pads non-aligned shapes up to block
+multiples, and falls back to the jnp reference on non-TPU backends (unless
+``interpret=True`` is forced, e.g. in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul.masked_matmul import masked_matmul_pallas
+from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+
+def _pad_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def masked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    ok: jax.Array,
+    *,
+    bm: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = x @ (w * periodic_mask(ok)); x: (..., K), w: (K, N), ok: (R, C)."""
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return masked_matmul_ref(x, w, ok)
+        interpret = False
+
+    lead = x.shape[:-1]
+    kdim, n = w.shape
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, kdim)
+
+    r, c = ok.shape
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, kdim)
+    # block sizes must stay compatible with the mask period
+    if bk_ < r and r % bk_:
+        bk_ = r
+    if bn_ < c and c % bn_:
+        bn_ = c
+    mp, np_, kp = _pad_to(m, bm_), _pad_to(n, bn_), _pad_to(kdim, bk_)
+    # padding K breaks the mask period alignment; pad K only in multiples of r
+    if kp != kdim:
+        kp = _pad_to(kdim, max(bk_, r) if bk_ % r == 0 or r % bk_ == 0 else bk_ * r)
+    xp = jnp.pad(x2, ((0, mp - m), (0, kp - kdim))) if (mp != m or kp != kdim) else x2
+    wp = jnp.pad(w, ((0, kp - kdim), (0, np_ - n))) if (kp != kdim or np_ != n) else w
+
+    # NOTE: zero-padded K rows multiply healthy/faulty mask entries of the
+    # wrapped period — harmless because the padded x columns are zero.
+    y = masked_matmul_pallas(
+        xp, wp, ok, bm=bm_, bn=bn_, bk=bk_, out_dtype=x.dtype, interpret=interpret
+    )
+    y = y[:m, :n]
+    return y.reshape(*lead, n)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fault-masked matmul.
+
+y = x @ (w * periodic_mask(ok))  — the FAP operator (paper SII, [8]) with
+the (R, C) systolic fault mask tiled periodically over the weight.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.mapping import periodic_mask
+
+
+def masked_matmul_ref(x, w, ok, *, out_dtype=None):
+    """x: (..., K); w: (K, N); ok: (R, C) 1/0 healthy mask."""
+    out_dtype = out_dtype or x.dtype
+    mask = periodic_mask(w.shape, ok, dtype=jnp.float32)
+    wm = (w.astype(jnp.float32) * mask).astype(w.dtype)
+    y = jnp.matmul(x.astype(jnp.float32), wm.astype(jnp.float32))
+    return y.astype(out_dtype)

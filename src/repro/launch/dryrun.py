@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run CLI.
+
+Lowers + compiles every runnable (arch x shape) cell on the production
+meshes — 16x16 (one pod, 256 chips) and 2x16x16 (two pods, 512 chips) —
+and records memory/cost/collective analysis per cell.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fault-mode", type=str, default="fap", choices=["fap", "none"])
+    ap.add_argument("--moe-impl", type=str, default="einsum", choices=["einsum", "scatter"])
+    ap.add_argument("--profile", type=str, default="baseline", choices=["baseline", "optimized"])
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, cell_skip_reason, get_arch, list_archs, valid_cells
+    from repro.launch.dryrun_lib import run_cell
+
+    if args.all:
+        cells = valid_cells()
+    else:
+        assert args.arch, "--arch required without --all"
+        shapes = [args.shape] if args.shape else [
+            s for s in SHAPES if cell_skip_reason(get_arch(args.arch), SHAPES[s]) is None
+        ]
+        cells = [(args.arch.replace("-", "_").replace(".", "_"), s) for s in shapes]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            tag = "pod2" if multi_pod else "pod1"
+            out_path = f"{args.out}/{arch}__{shape}__{tag}.json"
+            if args.skip_existing and os.path.exists(out_path):
+                try:
+                    prev = json.load(open(out_path))
+                    if prev.get("status") == "ok":
+                        print(f"[skip] {arch} {shape} {tag} (cached)")
+                        continue
+                except Exception:
+                    pass
+            t0 = time.time()
+            info = run_cell(
+                arch, shape,
+                multi_pod=multi_pod,
+                fault_mode=args.fault_mode,
+                moe_impl=args.moe_impl,
+                profile=args.profile,
+                out_dir=args.out,
+            )
+            dt = time.time() - t0
+            if info["status"] == "ok":
+                ca = info.get("cost_analysis", {})
+                mem = info.get("memory_analysis", {})
+                coll = info.get("collectives", {})
+                print(
+                    f"[ok]   {arch:28s} {shape:12s} {tag}  "
+                    f"flops/dev={ca.get('flops', 0):.3e} "
+                    f"coll={coll.get('total_bytes', 0):.3e}B "
+                    f"args={mem.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                    f"temp={mem.get('temp_size_in_bytes', 0)/1e9:.2f}GB "
+                    f"[{dt:.0f}s]",
+                    flush=True,
+                )
+            else:
+                failures += 1
+                print(f"[FAIL] {arch:28s} {shape:12s} {tag}  {info['error']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,271 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) cell and
+extract memory / cost / collective statistics. Import-safe for tests (the
+512-device XLA flag is set by dryrun.py, the CLI)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_skip_reason, get_arch
+from repro.core.masking import FaultContext
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.policy import launch_policy
+from repro.launch.sharding import (
+    MeshContext,
+    make_rules_for_mesh,
+    mesh_context,
+    resolve_spec,
+    tree_shardings,
+)
+from repro.launch.specs import cache_struct, input_specs, opt_struct, param_struct
+from repro.models import model as M
+from repro.train.optimizer import AdamWConfig, opt_state_specs
+from repro.train.step import make_train_step
+
+_SPEC_LEAF = lambda a: isinstance(a, tuple) and all(
+    x is None or isinstance(x, str) for x in a
+)
+
+
+def sharded_bytes(specs, structs, mctx: MeshContext) -> float:
+    """Analytic per-device bytes of a pytree under the resolved shardings."""
+    total = 0.0
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=_SPEC_LEAF)
+    flat_v = jax.tree_util.tree_leaves(structs)
+    for ax, v in zip(flat_s, flat_v):
+        spec = resolve_spec(ax, v.shape, mctx)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            shards *= mctx.axis_size(entry)
+        total += v.size * v.dtype.itemsize / shards
+    return total
+
+
+def _ctx_struct(cfg, mode: str):
+    if mode == "none":
+        return FaultContext(ok=None, mode="none"), FaultContext(ok=None, mode="none")
+    struct = FaultContext(
+        ok=jax.ShapeDtypeStruct((cfg.array_rows, cfg.array_cols), np.float32),
+        mode=mode,
+    )
+    return struct, None  # sharding filled by caller (needs mesh)
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    fault_mode: str = "fap",
+    moe_impl: str = "einsum",
+    profile: str = "baseline",
+    mesh=None,
+    overrides: Optional[dict] = None,
+):
+    """Returns (lowered, info) for one cell. ``mesh=None`` -> production mesh."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        raise ValueError(f"cell skipped: {skip}")
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_pod = mesh.shape.get("pod", 1)
+    n_data = mesh.shape["data"]
+    pol = launch_policy(
+        cfg, shape, n_data=n_data, n_pod=n_pod, moe_impl=moe_impl, profile=profile
+    )
+    if overrides:
+        from dataclasses import replace
+
+        pol = replace(pol, **overrides)
+    mctx = make_rules_for_mesh(
+        cfg, mesh, fsdp=pol.fsdp, seq_shard=pol.seq_shard, seq_rule=pol.seq_rule,
+        moe_slot_shard=pol.moe_slot_shard,
+    )
+
+    ctx_s, _ = _ctx_struct(cfg, fault_mode)
+    ctx_sh = (
+        FaultContext(ok=None, mode="none")
+        if fault_mode == "none"
+        else FaultContext(ok=NamedSharding(mesh, P()), mode=fault_mode)
+    )
+
+    with mesh, mesh_context(mctx):
+        params_s, specs = param_struct(cfg)
+        param_sh = tree_shardings(specs, params_s, mctx)
+        batch_s, batch_axes = input_specs(cfg, shape)
+        batch_sh = tree_shardings(batch_axes, batch_s, mctx)
+
+        info: dict[str, Any] = dict(
+            arch=arch,
+            shape=shape_name,
+            kind=shape.kind,
+            mesh=dict(mesh.shape),
+            policy=pol.describe(),
+            fault_mode=fault_mode,
+            param_bytes_per_device=sharded_bytes(specs, params_s, mctx),
+            params_total=cfg.param_count(),
+        )
+
+        if shape.kind == "train":
+            ocfg = AdamWConfig(moment_dtype=pol.moment_dtype, learning_rate=1e-4)
+            step = make_train_step(
+                cfg, ocfg,
+                attn_impl=pol.attn_impl, moe_impl=pol.moe_impl,
+                remat=pol.remat, microbatches=pol.microbatches,
+                fault_apply=pol.fault_apply,
+            )
+            opt_s = opt_struct(cfg, params_s, pol.moment_dtype)
+            opt_sh = tree_shardings(opt_state_specs(specs), opt_s, mctx)
+            info["opt_bytes_per_device"] = sharded_bytes(
+                opt_state_specs(specs), opt_s, mctx
+            )
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh, ctx_sh),
+                out_shardings=(param_sh, opt_sh, None),
+            ).lower(params_s, opt_s, batch_s, ctx_s)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch, ctx):
+                return M.prefill(
+                    params, batch, cfg, ctx,
+                    attn_impl=pol.attn_impl, moe_impl=pol.moe_impl,
+                )
+
+            cache_s = cache_struct(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = tree_shardings(M.cache_specs(cfg), cache_s, mctx)
+            info["cache_bytes_per_device"] = sharded_bytes(
+                M.cache_specs(cfg), cache_s, mctx
+            )
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(param_sh, batch_sh, ctx_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(params_s, batch_s, ctx_s)
+        else:  # decode
+            def decode_fn(params, tokens, cache, ctx):
+                return M.decode_step(params, tokens, cache, cfg, ctx, moe_impl=pol.moe_impl)
+
+            cache_s = cache_struct(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = tree_shardings(M.cache_specs(cfg), cache_s, mctx)
+            info["cache_bytes_per_device"] = sharded_bytes(
+                M.cache_specs(cfg), cache_s, mctx
+            )
+            tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), np.int32)
+            tok_sh = NamedSharding(mesh, resolve_spec(("batch", None), tok_s.shape, mctx))
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(param_sh, tok_sh, cache_sh, ctx_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(params_s, tok_s, cache_s, ctx_s)
+    return lowered, info
+
+
+def compile_and_analyze(lowered, info: dict, n_devices: int, hlo_path=None) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    info["compile_seconds"] = time.time() - t0
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        info["cost_analysis"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds", "utilization operand 0 {}", )
+            or k in ("flops", "bytes accessed")
+        }
+    except Exception as e:  # pragma: no cover
+        info["cost_analysis"] = {"error": str(e)}
+
+    try:
+        mem = compiled.memory_analysis()
+        fields = (
+            "temp_size_in_bytes",
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+        info["memory_analysis"] = {
+            f: int(getattr(mem, f)) for f in fields if hasattr(mem, f)
+        }
+        if not info["memory_analysis"]:
+            info["memory_analysis"] = {"repr": str(mem)}
+    except Exception as e:  # pragma: no cover
+        info["memory_analysis"] = {"error": str(e)}
+
+    try:
+        hlo = compiled.as_text()
+        info["hlo_bytes"] = len(hlo)
+        cost = analyze_hlo(hlo, n_devices_default=n_devices)
+        d = cost.as_dict()
+        info["hlo_cost"] = d  # loop-aware flops/bytes/collectives (per device)
+        info["collectives"] = dict(
+            total_bytes=d["collective_bytes"],
+            bytes_by_kind=d["coll_by_kind"],
+            count_by_kind=d["coll_count"],
+        )
+        if hlo_path:
+            import gzip
+
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(hlo)
+    except Exception as e:  # pragma: no cover
+        info["collectives"] = {"error": str(e)}
+    return info
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    fault_mode: str = "fap",
+    moe_impl: str = "einsum",
+    profile: str = "baseline",
+    out_dir: Optional[str] = None,
+    overrides: Optional[dict] = None,
+) -> dict:
+    t0 = time.time()
+    try:
+        lowered, info = build_cell(
+            arch, shape_name,
+            multi_pod=multi_pod, fault_mode=fault_mode, moe_impl=moe_impl,
+            profile=profile, overrides=overrides,
+        )
+        info["lower_seconds"] = time.time() - t0
+        n = 512 if multi_pod else 256
+        hlo_path = None
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            tag = "pod2" if multi_pod else "pod1"
+            hlo_path = os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.hlo.gz")
+        info = compile_and_analyze(lowered, info, n, hlo_path=hlo_path)
+        info["status"] = "ok"
+    except Exception as e:
+        info = dict(
+            arch=arch, shape=shape_name, status="error",
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-2000:],
+            multi_pod=multi_pod,
+        )
+    info["multi_pod"] = multi_pod
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "pod2" if multi_pod else "pod1"
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(info, f, indent=1, default=str)
+    return info

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to obtain placeholder devices; everything else sees the real backend.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one v5e pod (256 chips); 2x16x16 = two pods (512 chips).
+
+    When more placeholder devices exist than the mesh needs (the dry-run
+    forces 512 for the multi-pod pass), the single-pod mesh takes the first
+    256."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    import numpy as np
+
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} "
+            "(dry-run must set --xla_force_host_platform_device_count)"
+        )
+    arr = np.array(devs[:need]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))

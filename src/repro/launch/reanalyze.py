@@ -1,0 +1,45 @@
+"""Re-run the HLO cost walk over stored dry-run artifacts (no recompile).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def reanalyze_dir(d: str) -> int:
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(d, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.gz")
+        if not os.path.exists(hpath):
+            continue
+        info = json.load(open(jpath))
+        if info.get("status") != "ok":
+            continue
+        devices = 512 if info.get("multi_pod") else 256
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        cost = analyze_hlo(hlo, n_devices_default=devices).as_dict()
+        info["hlo_cost"] = cost
+        info["collectives"] = dict(
+            total_bytes=cost["collective_bytes"],
+            bytes_by_kind=cost["coll_by_kind"],
+            count_by_kind=cost["coll_count"],
+        )
+        with open(jpath, "w") as f:
+            json.dump(info, f, indent=1, default=str)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    print(f"reanalyzed {reanalyze_dir(args.dir)} cells")

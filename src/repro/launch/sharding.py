@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules engine (t5x-style, with divisibility fallback).
+
+Params and activations are annotated with *logical* axis names
+('batch', 'embed', 'heads', 'mlp', 'vocab', 'expert', ...). A ``MeshContext``
+maps each name to an ordered list of mesh-axis candidates; resolution walks
+the dims of a concrete shape, assigns the first candidate whose mesh size
+divides the dim (in units of e.g. head_dim so heads never split mid-head)
+and that is not already used by an earlier dim, and falls back to
+replication otherwise. This is what lets one rule set drive llama3-405b
+(128 heads / 16-way TP) and smollm-135m (9 heads -> replicated attention,
+MLP/vocab still tensor-parallel) without per-arch special cases.
+"""
+from __future__ import annotations
+
+import contextvars
+import math
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidate = Union[str, tuple[str, ...]]
+LogicalAxes = tuple[Optional[str], ...]
+
+
+@dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: dict[str, tuple[AxisCandidate, ...]]
+    units: dict[str, int] = field(default_factory=dict)
+
+    def axis_size(self, cand: AxisCandidate) -> int:
+        names = (cand,) if isinstance(cand, str) else cand
+        return int(np.prod([self.mesh.shape[a] for a in names]))
+
+
+_CTX: contextvars.ContextVar[Optional[MeshContext]] = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None
+)
+
+
+def current_mesh_context() -> Optional[MeshContext]:
+    return _CTX.get()
+
+
+@contextmanager
+def mesh_context(ctx: Optional[MeshContext]):
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def resolve_spec(axes: LogicalAxes, shape: Sequence[int], ctx: MeshContext) -> P:
+    """Logical axes -> PartitionSpec for a concrete shape under ctx rules."""
+    used: set[str] = set()
+    parts: list = []
+    for name, dim in zip(axes, shape):
+        entry = None
+        if name is not None:
+            unit = ctx.units.get(name, 1)
+            for cand in ctx.rules.get(name, ()):
+                names = (cand,) if isinstance(cand, str) else tuple(cand)
+                if any(a in used for a in names):
+                    continue
+                size = ctx.axis_size(cand)
+                if dim % unit == 0 and (dim // unit) % size == 0 and size > 1:
+                    entry = cand if isinstance(cand, str) else tuple(cand)
+                    used.update(names)
+                    break
+        parts.append(entry)
+    # trim trailing Nones for tidier specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(axes: LogicalAxes, shape: Sequence[int], ctx: Optional[MeshContext] = None):
+    ctx = ctx or current_mesh_context()
+    assert ctx is not None
+    return NamedSharding(ctx.mesh, resolve_spec(axes, shape, ctx))
+
+
+def shard_activation(x: jax.Array, axes: LogicalAxes) -> jax.Array:
+    """with_sharding_constraint when a mesh context is active; no-op else."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return x
+    spec = resolve_spec(axes, x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def tree_shardings(spec_tree, value_tree, ctx: Optional[MeshContext] = None):
+    """Map a pytree of logical-axes tuples + matching values -> NamedShardings."""
+    ctx = ctx or current_mesh_context()
+    assert ctx is not None
+    return jax.tree_util.tree_map(
+        lambda axes, v: NamedSharding(ctx.mesh, resolve_spec(axes, v.shape, ctx)),
+        spec_tree,
+        value_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(x is None or isinstance(x, str) for x in a),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+
+def make_rules(cfg, *, multi_pod: bool = False, fsdp: Optional[bool] = None) -> MeshContext:
+    """Build the MeshContext for an arch on the production mesh.
+
+    fsdp=None auto-enables ZeRO-3-style param sharding over the data(+pod)
+    axes for models > 3B params (weights+optimizer would not fit replicated).
+    """
+    from repro.launch.mesh import make_production_mesh  # local import (device init)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return make_rules_for_mesh(cfg, mesh, fsdp=fsdp)
+
+
+def make_rules_for_mesh(
+    cfg, mesh: Mesh, *, fsdp: Optional[bool] = None, seq_shard: bool = False,
+    seq_rule: bool = False, moe_slot_shard: bool = False,
+) -> MeshContext:
+    if fsdp is None:
+        fsdp = cfg.param_count() > 3e9
+    has_pod = "pod" in mesh.shape
+    batch_axes: tuple[AxisCandidate, ...] = ((("pod", "data"),) if has_pod else (("data",),))
+    # FSDP shards params over the batch axes (pod+data), composing with TP
+    fsdp_axes: tuple[AxisCandidate, ...] = batch_axes if fsdp else ()
+
+    hd = max(1, cfg.resolved_head_dim)
+    rules: dict[str, tuple[AxisCandidate, ...]] = {
+        # activations
+        "batch": batch_axes + (("data",),) if has_pod else batch_axes,
+        # seq_rule: let attention activations shard their seq axis on
+        # 'model' when the heads axis cannot (indivisible head counts)
+        "seq": ("model",) if seq_rule else (),
+        # Megatron-SP: the between-layer carry shards on seq for huge models
+        # (attention/MLP entry all-gathers, exits reduce-scatter back)
+        "seq_carry": ("model",) if seq_shard else (),
+        "heads": ("model",),  # activation head-count axis
+        "kv_heads": ("model",),
+        "kv_seq": ("model",),  # decode KV cache: heads first, seq fallback
+        # params
+        "embed": fsdp_axes,
+        "qkv": ("model",),  # flattened heads*head_dim weight axis
+        "kv": ("model",),
+        # moe_slot_shard: split expert-slot rows over 'model' and gather the
+        # expert weights instead (kills the giant TP partial-sum all-reduce
+        # when the expert count cannot use expert parallelism)
+        "moe_slots": ("model",) if moe_slot_shard else (),
+        "mlp": () if moe_slot_shard else ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "inner": ("model",),  # SSM d_inner
+        "dt_rank": (),
+        "state": (),
+        "conv": (),
+        "frame": (),
+        "layers": (),
+    }
+    units = {"qkv": hd, "kv": hd}
+    return MeshContext(mesh=mesh, rules=rules, units=units)

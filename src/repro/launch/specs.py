@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation),
+plus the logical-axes trees used to resolve in/out shardings per cell."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.train.optimizer import AdamWConfig, adamw_init
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """Returns (batch ShapeDtypeStructs, batch logical-axes tree).
+
+    train/prefill: full-sequence inputs; decode: one new token per sequence
+    (the KV cache is a separate argument — see cache_struct)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    i32 = jnp.int32
+    f32 = jnp.float32
+    structs: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+
+    if cfg.modality == "audio":
+        structs["embeds"] = jax.ShapeDtypeStruct((b, s, M.AUDIO_FRAME_DIM), f32)
+        axes["embeds"] = ("batch", "seq", None)
+        if shape.kind == "train":
+            structs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            axes["labels"] = ("batch", "seq")
+        return structs, axes
+
+    s_text = s
+    if cfg.modality == "vision" and shape.kind != "decode":
+        p = min(cfg.frontend_tokens, max(1, s // 2))
+        structs["embeds"] = jax.ShapeDtypeStruct((b, p, M.VISION_PATCH_DIM), f32)
+        axes["embeds"] = ("batch", "seq", None)
+        s_text = s - p
+    structs["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+    axes["tokens"] = ("batch", "seq")
+    if shape.kind == "train":
+        structs["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        axes["labels"] = ("batch", "seq")
+    return structs, axes
+
+
+def param_struct(cfg: ArchConfig):
+    """(params ShapeDtypeStructs, logical specs) without allocating."""
+    params_s = jax.eval_shape(
+        lambda key: M.init_params(cfg, key)[0], jax.random.PRNGKey(0)
+    )
+    return params_s, M.param_specs(cfg)
+
+
+def opt_struct(cfg: ArchConfig, params_s, moment_dtype: str = "float32"):
+    ocfg = AdamWConfig(moment_dtype=moment_dtype)
+    return jax.eval_shape(lambda p: adamw_init(p, ocfg), params_s)
+
+
+def cache_struct(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, seq_len))

@@ -1,0 +1,41 @@
+"""CPU-scale MLP classifier — the paper-faithful experiment substrate
+(stands in for VGG11/ResNet18/MobileNetV2; every hidden matmul runs through
+the systolic fault mapping exactly like the LM archs)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import FaultContext, fault_linear, healthy
+
+
+def init_classifier(cfg, key, in_dim: int):
+    ks = jax.random.split(key, cfg.num_layers + 1)
+    dims = [in_dim] + [cfg.d_ff] * (cfg.num_layers - 1) + [cfg.vocab_size]
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(ks[i], (a, b)) * (1.0 / math.sqrt(a))
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def classifier_forward(params, x, cfg, ctx: FaultContext | None = None):
+    ctx = ctx or healthy()
+    n = cfg.num_layers
+    for i in range(n):
+        x = fault_linear(x, params[f"w{i}"], ctx) + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.gelu(x)
+    return x
+
+
+def classifier_loss(params, batch, cfg, ctx=None):
+    logits = classifier_forward(params, batch["x"], cfg, ctx).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, dict(loss=loss, accuracy=acc)

@@ -1,0 +1,606 @@
+"""Model assembly: init, forward (train/prefill), decode, loss.
+
+One generic scan-over-layers transformer covering all assigned families:
+dense / moe / ssm (mamba) / hybrid (parallel attn+ssm) / vlm / audio.
+Per-layer params are stacked on a leading 'layers' dim and consumed by
+``jax.lax.scan`` (compact HLO — one lowered block regardless of depth) with
+a configurable remat policy. Every parameterized GEMM goes through
+``fault_linear`` so the chip's FaultContext masks exactly the weights the
+systolic mapping places on faulty PEs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import FaultContext, fault_linear, healthy, mask_selected_params
+from repro.launch.sharding import shard_activation
+from repro.models.layers import (
+    KVCache,
+    apply_norm,
+    attention_block,
+    mlp_block,
+    rms_norm,
+)
+from repro.models.moe import moe_block
+from repro.models.ssm import SSMCache, init_ssm_cache, ssm_block
+
+Array = jax.Array
+
+AUDIO_FRAME_DIM = 512  # stub conv-frontend output width (wav2vec2-style)
+VISION_PATCH_DIM = 1024  # stub InternViT patch-embedding width
+
+
+# ---------------------------------------------------------------------------
+# Initialization (+ logical-axis specs)
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fan_in))
+
+
+def _attn_specs(cfg):
+    s = dict(
+        wq=("embed", "qkv"),  # flattened heads*head_dim (unit = head_dim)
+        wk=("embed", "kv"),
+        wv=("embed", "kv"),
+        wo=("qkv", "embed"),
+    )
+    if cfg.qk_norm:
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    return s
+
+
+def _init_attn(cfg, key):
+    hq, hkv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=_dense(ks[0], (d, hq * hd)),
+        wk=_dense(ks[1], (d, hkv * hd)),
+        wv=_dense(ks[2], (d, hkv * hd)),
+        wo=_dense(ks[3], (hq * hd, d)),
+    )
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p, _attn_specs(cfg)
+
+
+def _mlp_specs(cfg):
+    if cfg.activation == "swiglu":
+        return dict(wg=("embed", "mlp"), wu=("embed", "mlp"), wd=("mlp", "embed"))
+    return dict(wi=("embed", "mlp"), wd=("mlp", "embed"))
+
+
+def _init_mlp(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        p = dict(wg=_dense(ks[0], (d, f)), wu=_dense(ks[1], (d, f)), wd=_dense(ks[2], (f, d)))
+    else:
+        p = dict(wi=_dense(ks[0], (d, f)), wd=_dense(ks[1], (f, d)))
+    return p, _mlp_specs(cfg)
+
+
+def _moe_specs(cfg):
+    return dict(
+        router=("embed", None),
+        wg=("expert", "embed", "mlp"),
+        wu=("expert", "embed", "mlp"),
+        wd=("expert", "mlp", "embed"),
+    )
+
+
+def _init_moe(cfg, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = dict(
+        router=_dense(ks[0], (d, e)),
+        wg=_dense(ks[1], (e, d, f)),
+        wu=_dense(ks[2], (e, d, f)),
+        wd=_dense(ks[3], (e, f, d)),
+    )
+    return p, _moe_specs(cfg)
+
+
+def _ssm_specs(cfg):
+    return dict(
+        in_proj=("embed", "inner"),
+        conv_w=(None, "inner"),
+        conv_b=("inner",),
+        x_proj=("inner", None),
+        dt_w=(None, "inner"),
+        dt_b=("inner",),
+        a_log=("inner", None),
+        d_skip=("inner",),
+        out_proj=("inner", "embed"),
+    )
+
+
+def _init_ssm(cfg, key):
+    d, di, n, r, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (di,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # softplus inverse
+    p = dict(
+        in_proj=_dense(ks[0], (d, 2 * di)),
+        conv_w=jax.random.normal(ks[1], (k, di)) * (1.0 / math.sqrt(k)),
+        conv_b=jnp.zeros((di,)),
+        x_proj=_dense(ks[2], (di, r + 2 * n)),
+        dt_w=_dense(ks[3], (r, di)),
+        dt_b=dt_bias,
+        a_log=jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        d_skip=jnp.ones((di,)),
+        out_proj=_dense(ks[5], (di, d)),
+    )
+    return p, _ssm_specs(cfg)
+
+
+def _norm_specs(cfg):
+    s = dict(scale=(None,))
+    if cfg.family == "audio":
+        s["bias"] = (None,)
+    return s
+
+
+def _norm_param(cfg):
+    p = dict(scale=jnp.ones((cfg.d_model,)))
+    if cfg.family == "audio":  # hubert uses LayerNorm
+        p["bias"] = jnp.zeros((cfg.d_model,))
+    return p, _norm_specs(cfg)
+
+
+def layer_specs(cfg) -> dict:
+    """Logical-axes tree of one (unstacked) layer — no allocation."""
+    s: dict = {"ln1": _norm_specs(cfg)}
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        s["attn"] = _attn_specs(cfg)
+    if cfg.family == "hybrid":
+        s["ssm"] = _ssm_specs(cfg)
+        s["alpha_attn"] = (None,)
+        s["alpha_ssm"] = (None,)
+    if cfg.family == "ssm":
+        s["ssm"] = _ssm_specs(cfg)
+    if cfg.family == "moe":
+        s["ln2"] = _norm_specs(cfg)
+        s["moe"] = _moe_specs(cfg)
+    elif cfg.family in ("dense", "vlm", "audio", "hybrid"):
+        s["ln2"] = _norm_specs(cfg)
+        s["mlp"] = _mlp_specs(cfg)
+    return s
+
+
+def _init_layer(cfg, key):
+    ks = jax.random.split(key, 4)
+    p = {}
+    p["ln1"], _ = _norm_param(cfg)
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        p["attn"], _ = _init_attn(cfg, ks[0])
+    if cfg.family == "hybrid":
+        p["ssm"], _ = _init_ssm(cfg, ks[1])
+        p["alpha_attn"] = jnp.ones((cfg.d_model,))
+        p["alpha_ssm"] = jnp.ones((cfg.d_model,))
+    if cfg.family == "ssm":
+        p["ssm"], _ = _init_ssm(cfg, ks[1])
+    if cfg.family == "moe":
+        p["ln2"], _ = _norm_param(cfg)
+        p["moe"], _ = _init_moe(cfg, ks[2])
+    elif cfg.family in ("dense", "vlm", "audio", "hybrid"):
+        p["ln2"], _ = _norm_param(cfg)
+        p["mlp"], _ = _init_mlp(cfg, ks[2])
+    return p, layer_specs(cfg)
+
+
+def param_specs(cfg) -> dict:
+    """Logical-axes tree mirroring init_params' structure — no allocation."""
+    _is_leaf = lambda a: isinstance(a, tuple) and all(
+        x is None or isinstance(x, str) for x in a
+    )
+    specs: dict = {"embed": ("vocab", "embed")}
+    specs["layers"] = jax.tree_util.tree_map(
+        lambda ax: ("layers",) + ax, layer_specs(cfg), is_leaf=_is_leaf
+    )
+    specs["final_ln"] = _norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("embed", "vocab")
+    if cfg.modality in ("audio", "vision"):
+        specs["frontend"] = ("frame", "embed")
+    return specs
+
+
+def init_params(cfg, key) -> tuple[dict, dict]:
+    """Returns (params, specs): params with [L, ...]-stacked layers, specs a
+    mirror pytree of logical-axis tuples ('layers' prepended on stacks)."""
+    k_emb, k_layers, k_head, k_front = jax.random.split(key, 4)
+    params: dict = {}
+    params["embed"] = jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * 0.02
+
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: _init_layer(cfg, k)[0])(layer_keys)
+    params["layers"] = stacked
+
+    params["final_ln"], _ = _norm_param(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(k_head, (cfg.d_model, cfg.vocab_size))
+    if cfg.modality == "audio":
+        params["frontend"] = _dense(k_front, (AUDIO_FRAME_DIM, cfg.d_model))
+    elif cfg.modality == "vision":
+        params["frontend"] = _dense(k_front, (VISION_PATCH_DIM, cfg.d_model))
+    return params, param_specs(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block(
+    lp: dict,
+    x: Array,
+    cfg,
+    ctx: FaultContext,
+    *,
+    positions,
+    attn_impl: str,
+    moe_impl: str,
+    moe_cf: float = 1.25,
+    cache: Optional[dict] = None,
+    build_cache: bool = False,
+    cache_len: int = 0,
+):
+    """One layer. Returns (x, new_cache (dict|None), aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    h = apply_norm(x, lp["ln1"], cfg.norm_eps)
+
+    if cfg.family == "ssm":
+        ssm_cache = (
+            SSMCache(cache["conv"], cache["h"]) if cache is not None else None
+        )
+        y, sc = ssm_block(
+            lp["ssm"], h, cfg, ctx, cache=ssm_cache, build_cache=build_cache
+        )
+        if cache is not None:
+            new_cache = dict(conv=sc.conv, h=sc.h)
+        elif build_cache:
+            new_cache = dict(ssm=sc)
+        x = x + y
+        return x, (new_cache or None), aux
+
+    if cfg.family == "hybrid":
+        kv_cache = None
+        ssm_cache = None
+        if cache is not None:
+            kv_cache = KVCache(cache["k"], cache["v"], cache_len)
+            ssm_cache = SSMCache(cache["conv"], cache["h"])
+        a, kv_out = attention_block(
+            lp["attn"], h, cfg, ctx,
+            positions=positions, impl=attn_impl, cache=kv_cache,
+            return_kv=build_cache,
+        )
+        sres, sc = ssm_block(
+            lp["ssm"], h, cfg, ctx, cache=ssm_cache, build_cache=build_cache
+        )
+        y = 0.5 * (a * lp["alpha_attn"].astype(a.dtype) + sres * lp["alpha_ssm"].astype(a.dtype))
+        x = x + y
+        if cache is not None or build_cache:
+            if cache is not None:
+                new_cache = dict(k=kv_out.k, v=kv_out.v, conv=sc.conv, h=sc.h)
+            else:
+                new_cache = dict(kv=kv_out, ssm=sc)
+        h2 = apply_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_block(lp["mlp"], h2, cfg, ctx)
+        return x, (new_cache or None), aux
+
+    # attention families: dense / moe / vlm / audio
+    kv_cache = None
+    if cache is not None:
+        kv_cache = KVCache(cache["k"], cache["v"], cache_len)
+    a, kv_out = attention_block(
+        lp["attn"], h, cfg, ctx,
+        positions=positions, impl=attn_impl, cache=kv_cache, return_kv=build_cache,
+    )
+    x = x + a
+    if cache is not None:
+        new_cache = dict(k=kv_out.k, v=kv_out.v)
+    elif build_cache:
+        new_cache = dict(kv=kv_out)
+    h2 = apply_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_block(lp["moe"], h2, cfg, ctx, impl=moe_impl, capacity_factor=moe_cf)
+    else:
+        y = mlp_block(lp["mlp"], h2, cfg, ctx)
+    x = x + y
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg, params, batch: dict, ctx: FaultContext) -> tuple[Array, Array]:
+    """Returns (x (B, S, d) in compute dtype, positions (B, S))."""
+    dtype = jnp.dtype(cfg.dtype)
+    parts = []
+    if cfg.modality == "audio":
+        x = fault_linear(batch["embeds"].astype(dtype), params["frontend"], ctx)
+        parts.append(x)
+    else:
+        if cfg.modality == "vision" and "embeds" in batch:
+            pv = fault_linear(batch["embeds"].astype(dtype), params["frontend"], ctx)
+            parts.append(pv)
+        if "tokens" in batch:
+            te = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+            parts.append(te)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    b, s = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard_activation(x, ("batch", "seq_carry", "embed"))
+    return x, positions
+
+
+def unembed(cfg, params, x: Array, ctx: FaultContext) -> Array:
+    if cfg.tie_embeddings:
+        logits = fault_linear(x, params["embed"].T, ctx)
+    else:
+        logits = fault_linear(x, params["lm_head"], ctx)
+    return shard_activation(logits, ("batch", "seq_carry", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / eval / prefill-without-cache)
+# ---------------------------------------------------------------------------
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "dots": "dots_with_no_batch_dims_saveable",
+    "full": "nothing_saveable",
+}
+
+
+def forward(
+    params: dict,
+    batch: dict,
+    cfg,
+    ctx: Optional[FaultContext] = None,
+    *,
+    attn_impl: str = "auto",
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+    remat: str = "dots",
+    fault_apply: str = "per_use",
+) -> tuple[Array, Array]:
+    """Full-sequence forward. Returns (logits (B, S, V), aux_loss).
+
+    fault_apply: 'per_use' masks inside every matmul (paper-faithful);
+    'per_step' pre-masks the array-mapped params once (identical math, one
+    weight-sized pass per step instead of per use — see EXPERIMENTS SPerf).
+    """
+    ctx = ctx or healthy()
+    ctx_unembed = ctx
+    if fault_apply == "per_step" and ctx.active:
+        params = mask_selected_params(params, ctx)
+        ctx = healthy()
+    x, positions = embed_inputs(cfg, params, batch, ctx)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, _, a = _block(
+            lp, h, cfg, ctx,
+            positions=positions, attn_impl=attn_impl, moe_impl=moe_impl,
+            moe_cf=moe_cf,
+        )
+        h = shard_activation(h, ("batch", "seq_carry", "embed"))
+        return (h, aux + a), None
+
+    if remat != "none":
+        policy = getattr(jax.checkpoint_policies, _REMAT_POLICIES[remat])
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = apply_norm(x, params["final_ln"], cfg.norm_eps)
+    # tied unembed keeps its use-site mask (the lookup needs unmasked rows)
+    logits = unembed(cfg, params, x, ctx_unembed if cfg.tie_embeddings else ctx)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(
+    params: dict,
+    batch: dict,
+    cfg,
+    ctx: Optional[FaultContext] = None,
+    *,
+    attn_impl: str = "auto",
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+    remat: str = "dots",
+    aux_weight: float = 0.01,
+    fault_apply: str = "per_use",
+) -> tuple[Array, dict]:
+    logits, aux = forward(
+        params, batch, cfg, ctx, attn_impl=attn_impl, moe_impl=moe_impl,
+        moe_cf=moe_cf, remat=remat, fault_apply=fault_apply,
+    )
+    labels = batch["labels"]
+    # frontends may prepend non-text positions (vlm): align to the tail
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1] :]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    acc = (jnp.argmax(logits32, axis=-1) == labels).astype(jnp.float32)
+    acc = (acc * mask).sum() / denom
+    loss = ce + aux_weight * aux
+    return loss, dict(loss=loss, ce=ce, aux=aux, accuracy=acc)
+
+
+# ---------------------------------------------------------------------------
+# KV/SSM cache: init, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def cache_buffer_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int) -> dict:
+    """Zero cache able to hold ``seq_len`` history (window-bounded for SWA).
+
+    Layout: stacked [L, ...] arrays + scalar 'index'."""
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    c: dict = {"index": jnp.zeros((), jnp.int32)}
+    if cfg.has_attention:
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        s_buf = cache_buffer_len(cfg, seq_len)
+        c["k"] = jnp.zeros((L, batch, hkv, s_buf, hd), dtype)
+        c["v"] = jnp.zeros((L, batch, hkv, s_buf, hd), dtype)
+    if cfg.has_ssm:
+        c["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)
+        c["h"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    return c
+
+
+def cache_specs(cfg) -> dict:
+    """Logical axes for the cache pytree (for pjit in/out shardings)."""
+    c: dict = {"index": ()}
+    if cfg.has_attention:
+        c["k"] = ("layers", "batch", "kv_heads", "kv_seq", None)
+        c["v"] = ("layers", "batch", "kv_heads", "kv_seq", None)
+    if cfg.has_ssm:
+        c["conv"] = ("layers", "batch", None, "inner")
+        c["h"] = ("layers", "batch", "inner", "state")
+    return c
+
+
+def _ring_perm(s_buf: int, total: int) -> np.ndarray:
+    """inv_perm[slot] = index (into the last s_buf tokens) stored at slot."""
+    return (np.arange(s_buf) - (total % s_buf)) % s_buf
+
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg,
+    ctx: Optional[FaultContext] = None,
+    *,
+    cache_len: Optional[int] = None,
+    attn_impl: str = "auto",
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+) -> tuple[Array, dict]:
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (logits_last (B, V), cache)."""
+    ctx = ctx or healthy()
+    x, positions = embed_inputs(cfg, params, batch, ctx)
+    b, s = x.shape[0], x.shape[1]
+    cache_len = cache_len or s
+    s_buf = cache_buffer_len(cfg, cache_len)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, piece, a = _block(
+            lp, h, cfg, ctx,
+            positions=positions, attn_impl=attn_impl, moe_impl=moe_impl,
+            moe_cf=moe_cf, build_cache=True,
+        )
+        h = shard_activation(h, ("batch", "seq_carry", "embed"))
+        return (h, aux + a), piece
+
+    (x, _aux), pieces = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    x = apply_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:, :], ctx)[:, 0]
+
+    cache = init_cache(cfg, b, cache_len)
+    if cfg.has_attention:
+        k_new, v_new = pieces["kv"]  # (L, B, Hkv, S, hd)
+        if s >= s_buf:
+            tail_k, tail_v = k_new[..., -s_buf:, :], v_new[..., -s_buf:, :]
+            perm = jnp.asarray(_ring_perm(s_buf, s)) if cfg.sliding_window and s_buf == cfg.sliding_window else jnp.arange(s_buf)
+            cache["k"] = jnp.take(tail_k, perm, axis=3).astype(cache["k"].dtype)
+            cache["v"] = jnp.take(tail_v, perm, axis=3).astype(cache["v"].dtype)
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), 0, axis=3
+            )
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3
+            )
+    if cfg.has_ssm:
+        sc = pieces["ssm"]
+        cache["conv"] = sc.conv.astype(cache["conv"].dtype)
+        cache["h"] = sc.h
+    cache["index"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(
+    params: dict,
+    tokens: Array,  # (B, s_new) — usually s_new == 1
+    cache: dict,
+    cfg,
+    ctx: Optional[FaultContext] = None,
+    *,
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+) -> tuple[Array, dict]:
+    """One autoregressive step against the cache. Returns (logits, cache')."""
+    ctx = ctx or healthy()
+    b, s = tokens.shape
+    index = cache["index"]
+    positions = index + jnp.arange(s, dtype=jnp.int32)[None]
+    positions = jnp.broadcast_to(positions, (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard_activation(x, ("batch", "seq", "embed"))
+
+    layer_cache = {k: v for k, v in cache.items() if k != "index"}
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, lc = xs
+        h, nc, a = _block(
+            lp, h, cfg, ctx,
+            positions=positions, attn_impl="dense", moe_impl=moe_impl,
+            moe_cf=moe_cf, cache=lc, cache_len=index,
+        )
+        return (h, aux + a), nc
+
+    (x, _aux), new_layer_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], layer_cache)
+    )
+    x = apply_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = unembed(cfg, params, x, ctx)
+    new_cache = dict(new_layer_cache)
+    new_cache["index"] = index + s
+    return logits, new_cache

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts block: top-k token-choice routing with static
+capacity, in two interchangeable implementations.
+
+``einsum``  — GShard/t5x-faithful one-hot dispatch/combine einsums. Simple,
+              robust, but the dispatch matmuls add O(T*E*C*d) FLOPs.
+``scatter`` — position-in-expert via cumsum + scatter-add dispatch and
+              gather combine: zero extra matmul FLOPs, same semantics.
+              (The beyond-paper optimization; see EXPERIMENTS.md SPerf.)
+
+Experts shard over the mesh 'model' axis when E divides it (expert
+parallelism — llama4's 128 experts); otherwise the expert FFN dims shard
+over 'model' (tensor parallelism inside experts — mixtral's 8).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import FaultContext, fault_einsum, fault_linear
+from repro.launch.sharding import shard_activation
+
+Array = jax.Array
+
+
+def _router(p, x2d, cfg, ctx):
+    """Returns (weights (T,k), expert_idx (T,k), aux_loss scalar)."""
+    t, d = x2d.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    logits = fault_linear(x2d, p["router"], ctx).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(gate_vals, axis=-1)  # renormalize over selected
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    sel_onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(axis=1)  # (T, E)
+    f_e = sel_onehot.mean(axis=0) / k
+    p_e = probs.mean(axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    # router z-loss (numerics guard at scale)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return weights, expert_idx, aux + 1e-3 * z
+
+
+def _expert_ffn(p, h, cfg, ctx):
+    """h: (E, C*, d) -> (E, C*, f) -> (E, C*, d), per-expert GEMMs."""
+    if cfg.activation == "swiglu":
+        g = fault_einsum("ecd,edf->ecf", h, p["wg"], ctx)
+        u = fault_einsum("ecd,edf->ecf", h, p["wu"], ctx)
+        z = jax.nn.silu(g) * u
+    else:
+        z = jax.nn.gelu(fault_einsum("ecd,edf->ecf", h, p["wi"], ctx))
+    z = shard_activation(z, ("expert", None, "mlp"))
+    return fault_einsum("ecf,efd->ecd", z, p["wd"], ctx)
+
+
+def moe_block(
+    p: dict,
+    x: Array,  # (B, S, d)
+    cfg,
+    ctx: FaultContext,
+    *,
+    impl: str = "einsum",
+    capacity_factor: float = 1.25,
+):
+    """Returns (y (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    x2d = x.reshape(b * s, d)
+    t = b * s
+    weights, expert_idx, aux = _router(p, x2d, cfg, ctx)
+    cap = max(k, int(s * k / e * capacity_factor)) if t >= e else k
+    # capacity is per (batch-row group): groups of size s keep dispatch
+    # tensors bounded and make the a2a pattern explicit under pjit.
+    g, gs = b, s
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (T, k, E)
+    # position of each token within its expert queue, per group
+    oh_g = onehot.reshape(g, gs, k, e)
+    pos_in_expert = (
+        jnp.cumsum(oh_g.reshape(g, gs * k, e), axis=1).reshape(g, gs, k, e) - 1
+    )
+    keep = (pos_in_expert < cap) & (oh_g > 0)  # (g, gs, k, E)
+    w_g = weights.reshape(g, gs, k)
+
+    if impl == "einsum":
+        # dispatch (g, gs, E, cap) one-hot over capacity slots
+        pos_clamped = jnp.clip(pos_in_expert, 0, cap - 1)
+        cap_oh = jax.nn.one_hot(pos_clamped, cap, dtype=x.dtype)  # (g,gs,k,E,cap)
+        dispatch = jnp.einsum(
+            "gskec,gske->gsec", cap_oh, keep.astype(x.dtype)
+        )  # (g, gs, E, cap)
+        combine = jnp.einsum("gsec,gsk,gske->gsec", dispatch, w_g.astype(x.dtype), keep.astype(x.dtype))
+        xg = x2d.reshape(g, gs, d)
+        h = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # (g, E, cap, d)
+        h = h.reshape(g, e, cap, d).swapaxes(0, 1).reshape(e, g * cap, d)
+        h = shard_activation(h, ("expert", "moe_slots", None))
+        out = _expert_ffn(p, h, cfg, ctx)  # (E, g*cap, d)
+        out = out.reshape(e, g, cap, d).swapaxes(0, 1)  # (g, E, cap, d)
+        y = jnp.einsum("gsec,gecd->gsd", combine, out)
+        y = shard_activation(y.reshape(b, s, d), ("batch", "seq_carry", "embed"))
+        return y, aux
+
+    if impl == "scatter":
+        # slot id for each (token, k): e * cap + pos; dropped -> dumped into
+        # a zero-weight contribution via keep mask
+        slot = (
+            jnp.argmax(oh_g, axis=-1) * cap + jnp.clip((pos_in_expert * oh_g).sum(-1), 0, cap - 1)
+        )  # (g, gs, k)
+        keep_tok = keep.any(axis=-1)  # (g, gs, k)
+        xg = x2d.reshape(g, gs, d)
+
+        def per_group(xg_i, slot_i, keep_i, w_i):
+            # scatter-add tokens into their expert slots
+            contrib = xg_i[:, None, :] * keep_i[..., None].astype(xg_i.dtype)  # (gs,k,d)
+            h = jnp.zeros((e * cap, d), xg_i.dtype).at[slot_i.reshape(-1)].add(
+                contrib.reshape(-1, d)
+            )
+            return h  # (e*cap, d)
+
+        h = jax.vmap(per_group)(xg, slot, keep_tok, w_g)  # (g, e*cap, d)
+        h = h.reshape(g, e, cap, d).swapaxes(0, 1).reshape(e, g * cap, d)
+        h = shard_activation(h, ("expert", "moe_slots", None))
+        out = _expert_ffn(p, h, cfg, ctx)
+        out = out.reshape(e, g, cap, d).swapaxes(0, 1).reshape(g, e * cap, d)
+
+        def per_group_combine(out_i, slot_i, keep_i, w_i):
+            gathered = out_i[slot_i.reshape(-1)].reshape(gs, k, d)
+            wk = (w_i * keep_i.astype(w_i.dtype))[..., None].astype(gathered.dtype)
+            return (gathered * wk).sum(axis=1)  # (gs, d)
+
+        y = jax.vmap(per_group_combine)(out, slot, keep_tok, w_g)
+        y = shard_activation(y.reshape(b, s, d), ("batch", "seq_carry", "embed"))
+        return y, aux
+
+    raise ValueError(f"unknown moe impl {impl!r}")

@@ -1,0 +1,103 @@
+"""Mamba-1 selective-SSM block (falcon-mamba / hymba's SSM branch).
+
+Train/prefill uses the selective scan (Pallas kernel on TPU, lax.scan
+reference elsewhere); decode carries (conv_state, ssm_state) — O(1) memory
+in sequence length, which is what makes the long_500k cells runnable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import FaultContext, fault_linear
+from repro.kernels.mamba_scan.ops import selective_scan, selective_step
+from repro.launch.sharding import shard_activation
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array  # (B, K-1, d_inner) last inputs to the causal conv
+    h: Array  # (B, d_inner, N) SSM state
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv via shift-and-add (K is tiny, typically 4).
+
+    x: (B, L, D); w: (K, D); b: (D,). Elementwise formulation shards
+    cleanly (no conv op in the HLO)."""
+    k = w.shape[0]
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    out = x * w[-1][None, None, :]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + shifted * w[k - 1 - i][None, None, :]
+    return out + b[None, None, :]
+
+
+def ssm_block(
+    p: dict,
+    x: Array,  # (B, S, d_model)
+    cfg,
+    ctx: FaultContext,
+    *,
+    cache: Optional[SSMCache] = None,
+    build_cache: bool = False,
+):
+    """Returns (y (B, S, d_model), new_cache).
+
+    ``build_cache`` (prefill): run the full scan and emit the decode cache
+    (conv-input tail + final SSM state)."""
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = fault_linear(x, p["in_proj"], ctx)  # (B, S, 2*di)
+    xb, z = jnp.split(xz, 2, axis=-1)
+    xb = shard_activation(xb, ("batch", "seq", "inner"))
+
+    new_cache = None
+    if cache is None:
+        xc = _causal_conv(xb, p["conv_w"], p["conv_b"])
+        if build_cache:
+            kc = cfg.ssm_conv - 1
+            hist = xb if s >= kc else jnp.pad(xb, ((0, 0), (kc - s, 0), (0, 0)))
+            new_conv = hist[:, -kc:, :]
+    else:
+        # decode: prepend the conv state, run the conv, keep the tail
+        hist = jnp.concatenate([cache.conv.astype(xb.dtype), xb], axis=1)
+        xc = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, -s:, :]
+        new_conv = hist[:, -(cfg.ssm_conv - 1) :, :]
+    xc = jax.nn.silu(xc)
+
+    dbc = fault_linear(xc, p["x_proj"], ctx)  # (B, S, r + 2N)
+    r = cfg.resolved_dt_rank
+    dt, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(fault_linear(dt, p["dt_w"], ctx) + p["dt_b"])  # (B,S,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+
+    if cache is None:
+        y, h_last = selective_scan(xc, dt, a, bmat, cmat, p["d_skip"])
+        if build_cache:
+            new_cache = SSMCache(conv=new_conv, h=h_last)
+    else:
+        h = cache.h
+        ys = []
+        for i in range(s):  # decode steps are 1 (or a small static number)
+            y_i, h = selective_step(
+                h, xc[:, i], dt[:, i], a, bmat[:, i], cmat[:, i], p["d_skip"]
+            )
+            ys.append(y_i)
+        y = jnp.stack(ys, axis=1)
+        new_cache = SSMCache(conv=new_conv, h=h)
+
+    y = y * jax.nn.silu(z)
+    return fault_linear(y, p["out_proj"], ctx), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,65 @@
+"""Batched serving engine over the model's prefill/decode steps.
+
+The engine runs a static-batch generate loop (prefill once, decode N) with
+the chip's FaultContext applied — i.e. serving a fault-aware model ON the
+faulty chip it was tuned for. Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import FaultContext, healthy
+from repro.models import model as M
+
+
+@dataclass
+class GenerateResult:
+    tokens: jax.Array  # (B, prompt + generated)
+    logprobs: jax.Array  # (B, generated)
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, ctx: Optional[FaultContext] = None, *, max_len: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx or healthy()
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b, ctx: M.prefill(p, b, cfg, ctx, cache_len=max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, ctx: M.decode_step(p, t, c, cfg, ctx)
+        )
+
+    def generate(
+        self,
+        prompts: jax.Array,  # (B, S) token ids
+        *,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+    ) -> GenerateResult:
+        logits, cache = self._prefill(self.params, {"tokens": prompts}, self.ctx)
+        toks = [prompts]
+        lps = []
+        cur = logits
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(max_new_tokens):
+            lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, lp / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lp, axis=-1)
+            lps.append(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0])
+            toks.append(nxt[:, None])
+            step_logits, cache = self._decode(self.params, nxt[:, None], cache, self.ctx)
+            cur = step_logits[:, 0]
+        return GenerateResult(
+            tokens=jnp.concatenate(toks, axis=1), logprobs=jnp.stack(lps, axis=1)
+        )

@@ -1,0 +1,132 @@
+"""Fault-tolerant training loop.
+
+Responsibilities: deterministic resume (checkpoint step -> data seek),
+periodic async checkpointing, periodic eval, straggler detection (per-step
+wall-clock watchdog -> logged + surfaced), and crash recovery (any
+exception triggers restore-from-latest and continue, up to a retry budget —
+the same path a preempted/failed node takes at cluster scale).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    eval_every: int = 100
+    log_every: int = 50
+    keep_checkpoints: int = 3
+    straggler_factor: float = 3.0  # step slower than factor x median => straggler
+    max_restarts: int = 2
+
+
+@dataclass
+class LoopState:
+    step: int = 0
+    metrics_history: list = field(default_factory=list)
+    straggler_events: list = field(default_factory=list)
+    restarts: int = 0
+
+
+def run_training(
+    cfg: LoopConfig,
+    *,
+    train_step: Callable,  # (params, opt, batch, ctx) -> (params, opt, metrics)
+    batch_at: Callable[[int], Any],
+    params: Any,
+    opt_state: Any,
+    ctx: Any,
+    eval_fn: Optional[Callable[[Any], dict]] = None,  # params -> metrics
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+) -> tuple[Any, Any, LoopState]:
+    """Run (or resume) training to cfg.total_steps. Returns final
+    (params, opt_state, loop_state)."""
+    state = LoopState()
+    saver = (
+        ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep_checkpoints)
+        if cfg.ckpt_dir
+        else None
+    )
+
+    # ---- resume ---------------------------------------------------------
+    if cfg.ckpt_dir and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
+        step0, flat, meta = ckpt_lib.load_checkpoint(cfg.ckpt_dir)
+        tree = ckpt_lib.restore_sharded({"params": params, "opt": opt_state}, flat)
+        params, opt_state = tree["params"], tree["opt"]
+        state.step = step0
+        log.info("resumed from step %d", step0)
+
+    step_times: list[float] = []
+
+    while state.step < cfg.total_steps:
+        try:
+            batch = batch_at(state.step)  # deterministic seek: no data loss
+            t0 = time.time()
+            params, opt_state, metrics = train_step(params, opt_state, batch, ctx)
+            jax.tree_util.tree_map(
+                lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+                metrics,
+            )
+            dt = time.time() - t0
+            state.step += 1
+
+            # ---- straggler watchdog --------------------------------------
+            if len(step_times) >= 8:
+                med = float(np.median(step_times[-64:]))
+                if dt > cfg.straggler_factor * med:
+                    state.straggler_events.append((state.step, dt, med))
+                    log.warning(
+                        "straggler step %d: %.3fs vs median %.3fs", state.step, dt, med
+                    )
+            step_times.append(dt)
+
+            if state.step % cfg.log_every == 0 or state.step == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step_time_s"] = dt
+                state.metrics_history.append((state.step, m))
+                if on_metrics:
+                    on_metrics(state.step, m)
+
+            if eval_fn and state.step % cfg.eval_every == 0:
+                em = eval_fn(params)
+                state.metrics_history.append((state.step, {"eval_" + k: float(v) for k, v in em.items()}))
+                if on_metrics:
+                    on_metrics(state.step, {"eval_" + k: float(v) for k, v in em.items()})
+
+            if saver and state.step % cfg.ckpt_every == 0:
+                saver.save(state.step, {"params": params, "opt": opt_state})
+
+        except (KeyboardInterrupt,):
+            raise
+        except Exception as e:  # crash -> restore-from-checkpoint path
+            state.restarts += 1
+            log.exception("step %d failed (%s); restart %d", state.step, e, state.restarts)
+            if state.restarts > cfg.max_restarts or not cfg.ckpt_dir:
+                raise
+            if saver:
+                saver.wait()
+            last = ckpt_lib.latest_step(cfg.ckpt_dir)
+            if last is None:
+                raise
+            _, flat, _ = ckpt_lib.load_checkpoint(cfg.ckpt_dir)
+            tree = ckpt_lib.restore_sharded({"params": params, "opt": opt_state}, flat)
+            params, opt_state = tree["params"], tree["opt"]
+            state.step = last
+
+    if saver:
+        saver.save(state.step, {"params": params, "opt": opt_state})
+        saver.wait()
+    return params, opt_state, state

@@ -1,0 +1,106 @@
+"""train_step / eval_step builders (pure functions, pjit-ready).
+
+Microbatch gradient accumulation runs as a lax.scan over microbatches with
+a configurable accumulator dtype — ``bfloat16`` accumulation is the
+gradient-compression knob (halves accumulator memory and the bytes moved
+by the cross-replica reduction)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import FaultContext, healthy
+from repro.models import model as M
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_loss_fn(
+    cfg, *, attn_impl="auto", moe_impl="einsum", moe_cf=1.25, remat="dots",
+    fault_apply="per_use",
+):
+    def loss(params, batch, ctx):
+        return M.loss_fn(
+            params, batch, cfg, ctx,
+            attn_impl=attn_impl, moe_impl=moe_impl, moe_cf=moe_cf, remat=remat,
+            fault_apply=fault_apply,
+        )
+
+    return loss
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig,
+    *,
+    attn_impl: str = "auto",
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+    remat: str = "dots",
+    microbatches: int = 1,
+    accum_dtype: str = "float32",
+    fault_apply: str = "per_use",
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, ctx) -> (params', opt', metrics)."""
+    loss_fn = make_loss_fn(
+        cfg, attn_impl=attn_impl, moe_impl=moe_impl, moe_cf=moe_cf, remat=remat,
+        fault_apply=fault_apply,
+    )
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, ctx: FaultContext):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch, ctx)
+        else:
+            adt = jnp.dtype(accum_dtype)
+
+            def mb(i, batch=batch):
+                return jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // microbatches), x.shape[0] // microbatches, 0
+                    ),
+                    batch,
+                )
+
+            def body(carry, i):
+                acc, met_acc = carry
+                (l, met), g = grad_fn(params, mb(i), ctx)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(adt), acc, g
+                )
+                met_acc = jax.tree_util.tree_map(lambda a, x: a + x, met_acc, met)
+                return (acc, met_acc), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), params
+            )
+            zero_m = dict(
+                loss=jnp.zeros((), jnp.float32), ce=jnp.zeros((), jnp.float32),
+                aux=jnp.zeros((), jnp.float32), accuracy=jnp.zeros((), jnp.float32),
+            )
+            (grads, msum), _ = jax.lax.scan(
+                body, (zero_g, zero_m), jnp.arange(microbatches)
+            )
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / microbatches).astype(jnp.float32), grads
+            )
+            metrics = jax.tree_util.tree_map(lambda x: x / microbatches, msum)
+
+        params, opt_state, info = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(info)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, **kw) -> Callable:
+    loss_fn = make_loss_fn(cfg, **kw)
+
+    def eval_step(params, batch, ctx: FaultContext):
+        _, metrics = loss_fn(params, batch, ctx)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run on the real single-CPU backend; the 512-device flag is ONLY for
+# the dry-run CLI. Sharding tests that need fake devices use subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

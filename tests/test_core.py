@@ -1,0 +1,263 @@
+"""Property tests (hypothesis) + unit tests for the eFAT core:
+fault-map algebra (Eq. 2/3), Algo 1, resilience interpolation, Algo 2."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FaultMap,
+    ResilienceTable,
+    ResilienceTable2D,
+    clustered_fault_map,
+    correlated_family,
+    expected_merged_rate,
+    expected_weight_loss,
+    fam_permutation,
+    fault_rate_list,
+    fixed_policy_plan,
+    from_fault_map,
+    group_and_fuse,
+    individual_plan,
+    masked_weight,
+    overlap_rate,
+    periodic_mask,
+    random_fault_map,
+    random_pair_merge_plan,
+)
+
+# ---------------------------------------------------------------------------
+# Fault-map algebra
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rate_a=st.floats(0.0, 0.5),
+    rate_b=st.floats(0.0, 0.5),
+    seed=st.integers(0, 10_000),
+)
+def test_merge_rate_bounds(rate_a, rate_b, seed):
+    a = random_fault_map(seed, 32, 32, rate_a)
+    b = random_fault_map(seed + 1, 32, 32, rate_b)
+    merged = a | b
+    assert merged.fault_rate <= min(1.0, a.fault_rate + b.fault_rate) + 1e-9
+    assert merged.fault_rate >= max(a.fault_rate, b.fault_rate) - 1e-9
+    # Eq. 3 exactly, using the measured overlap
+    expected = expected_merged_rate(a.fault_rate, b.fault_rate, overlap_rate(a, b))
+    assert merged.fault_rate == pytest.approx(expected, abs=1e-9)
+    # union semantics
+    assert np.array_equal(merged.faulty, a.faulty | b.faulty)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.floats(0.01, 0.3), seed=st.integers(0, 1000))
+def test_exact_fault_rate(rate, seed):
+    fm = random_fault_map(seed, 64, 64, rate)
+    assert fm.num_faults == round(rate * 64 * 64)
+
+
+def test_correlated_family_overlap_exceeds_independence():
+    fam = correlated_family(0, 4, 64, 64, base_rate=0.06, idio_rate=0.01)
+    a, b = fam[0], fam[1]
+    assert overlap_rate(a, b) > 2 * a.fault_rate * b.fault_rate
+
+
+def test_clustered_map_rate():
+    fm = clustered_fault_map(0, 64, 64, 0.08)
+    assert fm.fault_rate == pytest.approx(0.08, abs=0.002)
+
+
+# ---------------------------------------------------------------------------
+# Systolic mapping
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    din=st.integers(1, 70),
+    dout=st.integers(1, 70),
+    r=st.sampled_from([8, 16]),
+    seed=st.integers(0, 100),
+)
+def test_periodic_mask_semantics(din, dout, r, seed):
+    fm = random_fault_map(seed, r, r, 0.2)
+    mask = np.asarray(periodic_mask((din, dout), jnp.asarray(fm.ok_mask)))
+    for _ in range(20):
+        a = np.random.randint(din)
+        b = np.random.randint(dout)
+        assert mask[a, b] == fm.ok_mask[a % r, b % r]
+
+
+def test_expected_weight_loss_matches_mask():
+    fm = random_fault_map(3, 16, 16, 0.15)
+    shape = (40, 56)
+    mask = np.asarray(periodic_mask(shape, jnp.asarray(fm.ok_mask)))
+    assert expected_weight_loss(shape, fm) == pytest.approx(1.0 - mask.mean(), abs=1e-6)
+
+
+def test_masked_weight_grad_is_masked():
+    import jax
+
+    fm = random_fault_map(0, 8, 8, 0.3)
+    w = jnp.ones((16, 16))
+    ok = jnp.asarray(fm.ok_mask)
+
+    def f(w):
+        return jnp.sum(masked_weight(w, ok) ** 2)
+
+    g = jax.grad(f)(w)
+    mask = np.asarray(periodic_mask((16, 16), ok))
+    assert np.all((np.asarray(g) != 0) == (mask > 0))
+
+
+def test_fam_beats_fap_on_salient_mass():
+    """Greedy FAM assignment zeroes less saliency mass than identity (FAP)."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 48)) * rng.uniform(0.1, 10.0, size=(1, 48))
+    fm = random_fault_map(1, 16, 16, 0.2)
+    perm = fam_permutation(w, fm)
+    assert sorted(perm) == list(range(48))  # a real permutation
+    col_faults = fm.faulty.mean(axis=0)
+    sal = np.abs(w).sum(axis=0)
+    fap_loss = sum(sal[j] * col_faults[j % 16] for j in range(48))
+    fam_loss = sum(sal[j] * col_faults[perm[j] % 16] for j in range(48))
+    assert fam_loss <= fap_loss + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rates=st.lists(st.floats(0.001, 0.4), min_size=1, max_size=20),
+    max_fr=st.floats(0.05, 0.6),
+    max_int=st.floats(0.01, 0.1),
+    step=st.floats(0.1, 1.0),
+)
+def test_fault_rate_list_properties(rates, max_fr, max_int, step):
+    lfr = fault_rate_list(rates, max_fr=max_fr, max_interval=max_int, step=step)
+    assert lfr[0] == pytest.approx(min(rates))
+    upper = max(max(rates), max_fr)
+    assert lfr[-1] > upper  # covers the range (merged maps interpolate)
+    diffs = np.diff(lfr)
+    assert np.all(diffs > 0)
+    assert np.all(diffs <= max_int + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Resilience tables
+# ---------------------------------------------------------------------------
+
+
+def test_table_interpolation_exact_at_knots_and_monotone():
+    rates = [0.05, 0.1, 0.2, 0.3]
+    fn = lambda r: 10 * np.exp(15 * r)
+    t = ResilienceTable.from_function(rates, fn, cap=100000, constraint=0.9)
+    for r in rates:
+        assert t.required_steps(r) == pytest.approx(fn(r), rel=1e-9)
+    qs = np.linspace(0.05, 0.3, 37)
+    vals = [t.required_steps(q) for q in qs]
+    assert np.all(np.diff(vals) >= -1e-9)
+    # clamp below, linear-extrapolate (capped) above
+    assert t.required_steps(0.0) == pytest.approx(fn(0.05))
+    assert t.required_steps(0.9) <= 100000
+
+
+def test_table_json_roundtrip():
+    t = ResilienceTable.from_function([0.1, 0.2], lambda r: 5 + r, cap=10, constraint=0.5)
+    t2 = ResilienceTable.from_json(t.to_json())
+    assert np.allclose(t2.rates, t.rates)
+    assert t2.cap == t.cap
+
+
+def test_bilinear_2d():
+    ra, rb = [0.0, 0.1, 0.2], [0.0, 0.2]
+    z = np.array([[0, 2], [10, 12], [20, 22]], dtype=float)
+    t = ResilienceTable2D(ra, rb, z, cap=100, constraint=0.9)
+    for i, a in enumerate(ra):
+        for j, b in enumerate(rb):
+            assert t.required_steps(a, b) == pytest.approx(z[i, j])
+    assert t.required_steps(0.05, 0.1) == pytest.approx(6.0)  # center of a cell
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 + baselines
+# ---------------------------------------------------------------------------
+
+
+def _table():
+    rates = fault_rate_list([0.02], max_fr=0.5, max_interval=0.03, step=0.5)
+    return ResilienceTable.from_function(
+        rates, lambda r: 5 * np.exp(18 * r), cap=10**6, constraint=0.9
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 24))
+def test_group_and_fuse_partitions_chips(seed, n):
+    rng = np.random.default_rng(seed)
+    maps = [
+        random_fault_map(rng, 32, 32, float(r))
+        for r in np.clip(rng.normal(0.08, 0.03, n), 0.01, 0.3)
+    ]
+    plan = group_and_fuse(maps, _table(), m_comparisons=4, k_iterations=2, seed=seed)
+    covered = sorted(i for link in plan.links for i in link)
+    assert covered == list(range(n))  # exact partition, nothing lost
+    # fused map of each group is the union of its members
+    for fm, link in zip(plan.fault_maps, plan.links):
+        union = np.zeros_like(maps[0].faulty)
+        for i in link:
+            union |= maps[i].faulty
+        assert np.array_equal(fm.faulty, union)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_efat_never_costs_more_than_individual(seed):
+    """Each Algo-2 merge requires saving > 0, so the plan's table cost can
+    only improve on per-chip selection."""
+    maps = correlated_family(seed, 16, 32, 32, base_rate=0.05, idio_rate=0.015)
+    t = _table()
+    efat = group_and_fuse(maps, t, m_comparisons=6, k_iterations=2, seed=seed)
+    indiv = individual_plan(maps, t)
+    assert efat.total_steps <= indiv.total_steps + 1e-6
+
+
+def test_independent_maps_rarely_merge():
+    maps = [random_fault_map(100 + i, 32, 32, 0.1) for i in range(16)]
+    plan = group_and_fuse(maps, _table(), m_comparisons=6, k_iterations=2, seed=0)
+    assert plan.num_jobs >= 14  # Eq. 3: no correlation -> no benefit
+
+
+def test_correlated_maps_do_merge():
+    maps = correlated_family(3, 16, 32, 32, base_rate=0.06, idio_rate=0.01)
+    plan = group_and_fuse(maps, _table(), m_comparisons=8, k_iterations=3, seed=0)
+    assert plan.num_jobs < 16
+
+
+def test_baseline_plans_cover_all_chips():
+    maps = [random_fault_map(i, 32, 32, 0.1) for i in range(9)]
+    for plan in (
+        fixed_policy_plan(maps, 25),
+        random_pair_merge_plan(maps, steps_per_job=25, seed=0),
+        individual_plan(maps, _table()),
+    ):
+        covered = sorted(i for link in plan.links for i in link)
+        assert covered == list(range(9))
+
+
+def test_fault_context_masks_only_in_fap_mode():
+    import jax
+
+    fm = random_fault_map(0, 8, 8, 0.5)
+    w = jnp.ones((8, 8))
+    x = jnp.ones((1, 8))
+    from repro.core import fault_linear, healthy
+
+    y_healthy = fault_linear(x, w, healthy())
+    y_fap = fault_linear(x, w, from_fault_map(fm))
+    assert float(y_healthy[0, 0]) == 8.0
+    assert float(jnp.max(y_fap)) < 8.0

@@ -1,0 +1,53 @@
+"""Dual fault types (PE bypass + weight-memory stuck-at-1) and the 2-D
+resilience surface — the paper's §III-B multi-dimensional extension."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import random_fault_map
+from repro.core.dual import dual_fault_weight, measure_resilience_2d, project_params
+from repro.core.mapping import periodic_mask
+from repro.train.fat_trainer import ClassifierFATTrainer
+
+
+def test_dual_fault_weight_semantics():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)).astype(np.float32))
+    fm_pe = random_fault_map(0, 16, 16, 0.2)
+    fm_sa1 = random_fault_map(1, 16, 16, 0.2)
+    out = np.asarray(dual_fault_weight(w, fm_pe, fm_sa1, magnitude=0.5))
+    pe_mask = np.asarray(periodic_mask((32, 32), jnp.asarray(fm_pe.ok_mask)))
+    sa1 = np.asarray(periodic_mask((32, 32), jnp.asarray(fm_sa1.faulty, jnp.float32)))
+    # PE bypass dominates: anything on a faulty PE is zero
+    assert np.all(out[pe_mask == 0] == 0)
+    # stuck-at-1 cells on healthy PEs read back +-magnitude
+    sel = (sa1 > 0) & (pe_mask > 0)
+    assert np.all(np.abs(out[sel]) == pytest.approx(0.5))
+    # untouched cells pass through
+    clean = (sa1 == 0) & (pe_mask > 0)
+    assert np.allclose(out[clean], np.asarray(w)[clean])
+
+
+def test_projection_idempotent():
+    params = {"w0": jnp.ones((16, 16)), "b0": jnp.zeros(16)}
+    fm_sa1 = random_fault_map(2, 8, 8, 0.3)
+    p1 = project_params(params, None, fm_sa1)
+    p2 = project_params(p1, None, fm_sa1)
+    assert np.allclose(np.asarray(p1["w0"]), np.asarray(p2["w0"]))
+    assert np.array_equal(np.asarray(p1["b0"]), np.asarray(params["b0"]))
+
+
+def test_resilience_2d_surface_monotone_in_pe_rate():
+    cfg = get_arch("paper-mlp")
+    tr = ClassifierFATTrainer(cfg, pretrain_steps=400, eval_batches=2)
+    constraint = tr.baseline_accuracy - 0.06
+    table = measure_resilience_2d(
+        tr, rates_pe=[0.05, 0.3], rates_sa1=[0.0, 0.1], constraint=constraint,
+        max_steps=250, repeats=1, seed=0, magnitude=0.5,
+    )
+    # higher PE rate never needs fewer steps (at fixed sa1 rate)
+    assert table.steps[1, 0] >= table.steps[0, 0]
+    assert table.steps[1, 1] >= table.steps[0, 1]
+    # bilinear query inside the grid is finite and bounded by the cap
+    q = table.required_steps(0.15, 0.05)
+    assert 0 <= q <= 250

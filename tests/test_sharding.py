@@ -1,0 +1,155 @@
+"""Sharding rules engine + (subprocess) small-mesh dry-run integration.
+
+The rules tests run in-process on 1 device (resolution is pure logic); the
+mesh tests spawn subprocesses with --xla_force_host_platform_device_count
+so the main test process keeps its single-device backend.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch.policy import launch_policy
+from repro.configs.base import SHAPES
+from repro.launch.sharding import MeshContext, make_rules_for_mesh, resolve_spec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fake_mesh_ctx(cfg, shape=(4, 4), axes=("data", "model"), **kw):
+    devs = np.array([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    mesh = Mesh(devs, axes)  # single real device repeated: fine for rules logic
+    return make_rules_for_mesh(cfg, mesh, **kw)
+
+
+def test_divisibility_fallback_heads():
+    cfg = get_arch("smollm-135m")  # 9 heads, head_dim 64
+    ctx = _fake_mesh_ctx(cfg, (4, 4))
+    # wq: (embed, qkv) with qkv unit = 64; 9 heads % 4 != 0 -> replicate
+    spec = resolve_spec(("embed", "qkv"), (576, 9 * 64), ctx)
+    assert spec == P()
+    # mlp dim 1536 % 4 == 0 -> sharded
+    spec = resolve_spec(("embed", "mlp"), (576, 1536), ctx)
+    assert spec == P(None, "model")
+
+
+def test_heads_shard_when_divisible():
+    cfg = get_arch("llama3-405b")  # 128 heads
+    ctx = _fake_mesh_ctx(cfg, (4, 4), fsdp=True)
+    spec = resolve_spec(("embed", "qkv"), (16384, 128 * 128), ctx)
+    assert spec == P("data", "model")
+    # kv heads = 8, divisible by 4
+    spec = resolve_spec(("embed", "kv"), (16384, 8 * 128), ctx)
+    assert spec == P("data", "model")
+
+
+def test_no_axis_used_twice():
+    cfg = get_arch("qwen3-0.6b")
+    ctx = _fake_mesh_ctx(cfg, (4, 4))
+    # batch takes data; a second data-wanting dim must fall back
+    spec = resolve_spec(("batch", "batch"), (8, 8), ctx)
+    assert spec in (P("data"), P(("data",)))
+
+
+def test_kv_cache_seq_fallback():
+    """kv_heads indivisible -> the cache shards its seq axis instead."""
+    cfg = get_arch("llama3-405b")  # kv=8 vs model=16
+    ctx = _fake_mesh_ctx(cfg, (2, 16), ("data", "model"))
+    spec = resolve_spec(
+        ("layers", "batch", "kv_heads", "kv_seq", None),
+        (126, 128, 8, 32768, 128),
+        ctx,
+    )
+    assert spec == P(None, "data", None, "model")
+
+
+def test_expert_parallelism_when_divisible():
+    cfg = get_arch("llama4-maverick-400b-a17b")  # 128 experts
+    ctx = _fake_mesh_ctx(cfg, (2, 16), ("data", "model"), fsdp=True)
+    spec = resolve_spec(("expert", "embed", "mlp"), (128, 5120, 8192), ctx)
+    assert spec == P("model", "data")  # EP + FSDP; mlp falls back (model used)
+    cfg2 = get_arch("mixtral-8x22b")  # 8 experts -> TP inside experts
+    ctx2 = _fake_mesh_ctx(cfg2, (2, 16), ("data", "model"), fsdp=True)
+    spec2 = resolve_spec(("expert", "embed", "mlp"), (8, 6144, 16384), ctx2)
+    assert spec2 == P(None, "data", "model")
+
+
+def test_multi_pod_batch_axes():
+    cfg = get_arch("phi3-mini-3.8b")
+    ctx = _fake_mesh_ctx(cfg, (2, 2, 4), ("pod", "data", "model"), fsdp=True)
+    spec = resolve_spec(("batch", "seq"), (256, 4096), ctx)
+    assert spec == P(("pod", "data"))
+
+
+def test_seq_carry_rule_only_when_enabled():
+    cfg = get_arch("llama3-405b")
+    on = _fake_mesh_ctx(cfg, (4, 4), fsdp=True, seq_shard=True)
+    off = _fake_mesh_ctx(cfg, (4, 4), fsdp=True, seq_shard=False)
+    assert resolve_spec(("batch", "seq_carry", "embed"), (256, 4096, 16384), on) == P(
+        "data", "model"
+    )
+    assert resolve_spec(("batch", "seq_carry", "embed"), (256, 4096, 16384), off) == P(
+        "data"
+    )
+
+
+def test_launch_policy_scaling():
+    big = launch_policy(get_arch("llama3-405b"), SHAPES["train_4k"])
+    assert big.fsdp and big.seq_shard and big.microbatches > 1
+    assert big.moment_dtype == "bfloat16"
+    small = launch_policy(get_arch("smollm-135m"), SHAPES["train_4k"])
+    assert not small.fsdp and small.microbatches == 1
+    dec = launch_policy(get_arch("qwen3-0.6b"), SHAPES["decode_32k"])
+    assert dec.attn_impl == "dense" and dec.remat == "none"
+
+
+# ---------------------------------------------------------------------------
+# subprocess small-mesh integration (marked slow)
+# ---------------------------------------------------------------------------
+
+_SUB = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=16'
+import jax, numpy as np, json
+from jax.sharding import Mesh
+import repro.launch.dryrun_lib as D
+def small_mesh(multi_pod=False):
+    shape = (2,2,4) if multi_pod else (4,4)
+    axes = ('pod','data','model') if multi_pod else ('data','model')
+    devs = np.array(jax.devices()[:int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
+D.make_production_mesh = small_mesh
+info = D.run_cell('%s', '%s', multi_pod=%s)
+print('RESULT', json.dumps(dict(status=info['status'], err=info.get('error',''),
+      coll=info.get('collectives',{}).get('total_bytes', -1))))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape,mp",
+    [
+        ("smollm_135m", "train_4k", False),
+        ("qwen3_0_6b", "decode_32k", False),
+        ("hymba_1_5b", "long_500k", False),
+        ("smollm_135m", "train_4k", True),
+    ],
+)
+def test_small_mesh_cell_compiles(arch, shape, mp):
+    code = _SUB % (arch, shape, mp)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=420,
+    )
+    lines = [l for l in out.stdout.splitlines() if l.startswith("RESULT")]
+    assert lines, f"no result: {out.stdout[-800:]} {out.stderr[-800:]}"
+    res = json.loads(lines[0][len("RESULT "):])
+    assert res["status"] == "ok", res["err"]
+    assert res["coll"] >= 0

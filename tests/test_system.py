@@ -1,0 +1,54 @@
+"""End-to-end system tests: the full eFAT pipeline (Steps 1-4) over a small
+fleet, exercising resilience measurement, Algo-2 grouping, consolidated FAT
+and per-chip deployment evaluation — the paper's Fig. 7 flow."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import EFAT, EFATConfig, correlated_family
+from repro.train.fat_trainer import ClassifierFATTrainer
+
+
+@pytest.fixture(scope="module")
+def trainer():
+    return ClassifierFATTrainer(get_arch("paper-mlp"), pretrain_steps=400, eval_batches=2)
+
+
+def test_efat_end_to_end(trainer):
+    constraint = trainer.baseline_accuracy - 0.05
+    fleet = correlated_family(5, 8, 32, 32, base_rate=0.06, idio_rate=0.02)
+    ef = EFAT(
+        trainer,
+        EFATConfig(
+            constraint=constraint, max_fr=0.25, max_interval=0.06, step_ratio=0.8,
+            repeats=2, max_steps=250, m_comparisons=4, k_iterations=2,
+        ),
+    )
+    result = ef.run(fleet)
+    # every chip served exactly once
+    chips = sorted(c for link in result.plan.links for c in link)
+    assert chips == list(range(8))
+    # correlated fleet -> Step 3 actually fused some maps
+    assert result.plan.num_jobs < 8
+    # most chips meet the constraint after consolidated FAT
+    assert result.satisfied_fraction >= 0.6, result.summary()
+    # eFAT cost never exceeds individual per-chip selection (Algo 2 invariant)
+    indiv = ef.run_baseline(fleet, "individual")
+    assert result.total_retraining_steps <= indiv.total_retraining_steps + 1e-6
+
+
+def test_relaxed_constraint_cheaper(trainer):
+    """Paper Fig. 3: relaxing the constraint reduces selected amounts."""
+    from repro.core import fault_rate_list
+    from repro.core.resilience import measure_resilience
+
+    rates = fault_rate_list([0.05], max_fr=0.3, max_interval=0.08, step=0.9)
+    tight = measure_resilience(
+        trainer, rates, trainer.baseline_accuracy - 0.02,
+        array_shape=(32, 32), repeats=2, max_steps=250, seed=1,
+    )
+    loose = measure_resilience(
+        trainer, rates, trainer.baseline_accuracy - 0.10,
+        array_shape=(32, 32), repeats=2, max_steps=250, seed=1,
+    )
+    assert loose.max_steps_stat.sum() <= tight.max_steps_stat.sum()

@@ -1,0 +1,190 @@
+"""Training-substrate tests: checkpoint roundtrip + elastic restore, crash
+-recovery resume, straggler detection, optimizer behavior, data pipeline
+determinism/seekability, LM trainability on the synthetic stream."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduce_config
+from repro.core import from_fault_map, healthy, random_fault_map
+from repro.data.synthetic import ClusterData, TokenStream
+from repro.models import model as M
+from repro.train import checkpoint as C
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import AdamWConfig, adamw_init, cosine_schedule
+from repro.train.step import make_eval_step, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_token_stream_deterministic_and_seekable():
+    s1 = TokenStream(97, 32, 4, seed=3)
+    s2 = TokenStream(97, 32, 4, seed=3)
+    b5a = s1.batch_at(5)
+    b5b = s2.batch_at(5)
+    assert np.array_equal(np.asarray(b5a["tokens"]), np.asarray(b5b["tokens"]))
+    b6 = s1.batch_at(6)
+    assert not np.array_equal(np.asarray(b5a["tokens"]), np.asarray(b6["tokens"]))
+    # labels are next-token targets
+    assert np.array_equal(
+        np.asarray(b5a["labels"][:, :-1]), np.asarray(b5a["tokens"][:, 1:])
+    )
+
+
+def test_cluster_data_eval_split_differs():
+    d = ClusterData(seed=0)
+    tr = d.batch_at(0, 64)
+    ev = d.batch_at(0, 64, split="eval")
+    assert not np.array_equal(np.asarray(tr["x"]), np.asarray(ev["x"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    for step in (10, 20, 30, 40):
+        C.save_checkpoint(str(tmp_path), step, tree, keep=2)
+    assert C.latest_step(str(tmp_path)) == 40
+    steps_on_disk = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps_on_disk == [30, 40]  # gc kept last 2
+    step, flat, meta = C.load_checkpoint(str(tmp_path))
+    restored = C.restore_sharded(tree, flat)
+    assert np.array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_elastic_restore_new_sharding(tmp_path):
+    """Restore onto a different device layout (elastic rescale path)."""
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    C.save_checkpoint(str(tmp_path), 1, tree)
+    _, flat, _ = C.load_checkpoint(str(tmp_path))
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))}
+    restored = C.restore_sharded(tree, flat, sh)
+    assert np.array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)
+
+
+def test_async_checkpointer(tmp_path):
+    saver = C.AsyncCheckpointer(str(tmp_path))
+    saver.save(7, {"x": jnp.ones(3)})
+    saver.wait()
+    assert C.latest_step(str(tmp_path)) == 7
+
+
+# ---------------------------------------------------------------------------
+# loop: resume after crash, straggler log
+# ---------------------------------------------------------------------------
+
+
+def test_loop_crash_recovery(tmp_path):
+    cfg = reduce_config(get_arch("smollm-135m"))
+    params, _ = M.init_params(cfg, KEY)
+    ocfg = AdamWConfig(learning_rate=1e-3)
+    opt = adamw_init(params, ocfg)
+    stream = TokenStream(cfg.vocab_size, 16, 2, seed=0)
+    base_step = make_train_step(cfg, ocfg, remat="none")
+    crashes = {"armed": True}
+
+    def flaky_step(p, o, b, ctx):
+        if crashes["armed"] and int(o["count"]) == 7:
+            crashes["armed"] = False
+            raise RuntimeError("simulated node failure")
+        return base_step(p, o, b, ctx)
+
+    lc = LoopConfig(
+        total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=5, eval_every=100,
+        log_every=100, max_restarts=2,
+    )
+    params2, opt2, state = run_training(
+        lc, train_step=flaky_step, batch_at=stream.batch_at,
+        params=params, opt_state=opt, ctx=healthy(),
+    )
+    assert state.restarts == 1
+    assert state.step == 12
+    assert int(opt2["count"]) == 12  # optimizer state restored + continued
+
+
+def test_loop_resume_from_disk(tmp_path):
+    cfg = reduce_config(get_arch("smollm-135m"))
+    params, _ = M.init_params(cfg, KEY)
+    ocfg = AdamWConfig(learning_rate=1e-3)
+    opt = adamw_init(params, ocfg)
+    stream = TokenStream(cfg.vocab_size, 16, 2, seed=0)
+    step = make_train_step(cfg, ocfg, remat="none")
+    lc = LoopConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=3, eval_every=100, log_every=100)
+    run_training(lc, train_step=step, batch_at=stream.batch_at, params=params, opt_state=opt, ctx=healthy())
+    # second invocation picks up at 6 and continues to 9
+    lc2 = LoopConfig(total_steps=9, ckpt_dir=str(tmp_path), ckpt_every=3, eval_every=100, log_every=100)
+    _, opt2, state = run_training(
+        lc2, train_step=step, batch_at=stream.batch_at, params=params, opt_state=opt, ctx=healthy()
+    )
+    assert state.step == 9
+    assert int(opt2["count"]) == 9
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(s(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(s(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(s(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_bf16_moments_close_to_fp32():
+    cfg = reduce_config(get_arch("smollm-135m"))
+    params, _ = M.init_params(cfg, KEY)
+    stream = TokenStream(cfg.vocab_size, 16, 2, seed=0)
+    outs = {}
+    for mdt in ("float32", "bfloat16"):
+        ocfg = AdamWConfig(learning_rate=1e-3, moment_dtype=mdt)
+        step = make_train_step(cfg, ocfg, remat="none")
+        p, o = params, adamw_init(params, ocfg)
+        for i in range(3):
+            p, o, m = step(p, o, stream.batch_at(i), healthy())
+        outs[mdt] = float(m["loss"])
+    assert outs["bfloat16"] == pytest.approx(outs["float32"], rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# FAT actually recovers accuracy (end-to-end learning check)
+# ---------------------------------------------------------------------------
+
+
+def test_lm_fat_recovers_accuracy():
+    cfg = reduce_config(get_arch("smollm-135m"))
+    params, _ = M.init_params(cfg, KEY)
+    ocfg = AdamWConfig(learning_rate=3e-3)
+    stream = TokenStream(cfg.vocab_size, 32, 8, seed=1, noise=0.02)
+    step = jax.jit(make_train_step(cfg, ocfg, remat="none"))
+    ev = jax.jit(make_eval_step(cfg, remat="none"))
+    opt = adamw_init(params, ocfg)
+    for i in range(120):
+        params, opt, m = step(params, opt, stream.batch_at(i), healthy())
+    healthy_acc = float(ev(params, stream.batch_at(10_000), healthy())["accuracy"])
+    assert healthy_acc > 0.5, f"healthy model failed to learn: {healthy_acc}"
+    fm = random_fault_map(5, cfg.array_rows, cfg.array_cols, 0.25)
+    ctx = from_fault_map(fm)
+    faulty_acc = float(ev(params, stream.batch_at(10_000), ctx)["accuracy"])
+    opt = adamw_init(params, ocfg)
+    for i in range(60):
+        params, opt, m = step(params, opt, stream.batch_at(1000 + i), ctx)
+    fat_acc = float(ev(params, stream.batch_at(10_000), ctx)["accuracy"])
+    assert fat_acc > faulty_acc + 0.02, (healthy_acc, faulty_acc, fat_acc)
