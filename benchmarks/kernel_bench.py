@@ -6,6 +6,10 @@ made structurally in EXPERIMENTS.md SPerf from the lowered HLO.
 Here we measure the paper-relevant CPU-visible deltas:
   * masked vs unmasked matmul (the FAP overhead the fused kernel removes)
   * blockwise vs dense attention at long sequence (memory-safe prefill)
+  * per-kernel before/after regression rows for all four Pallas kernels
+    (reference path vs the kernel path through the shared runtime layer;
+    on CPU the kernel path runs in interpret mode, so the timing is a
+    correctness/regression signal, not a perf claim)
 """
 from __future__ import annotations
 
@@ -13,9 +17,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import from_fault_map, healthy, random_fault_map
 from repro.core.masking import fault_linear
+from repro.kernels.common import dtype_tol, is_tpu_backend
 from repro.models.layers import attention_impl
 
 Row = tuple[str, float, str]
@@ -68,4 +74,141 @@ def bench_attention_impls() -> list[Row]:
     ]
 
 
-ALL = [bench_masked_matmul_overhead, bench_attention_impls]
+# ---------------------------------------------------------------------------
+# Per-kernel before/after regression harness (all four Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _regression_row(name: str, ref_fn, kernel_fn, ref_out, kernel_out) -> list[Row]:
+    """Time the reference ('before') and kernel ('after') paths and check
+    the kernel against the oracle with the shared tolerance table."""
+    rtol, atol = dtype_tol(jnp.float32, atol_scale=50)
+    err = float(
+        np.max(
+            np.abs(
+                np.asarray(kernel_out, np.float32) - np.asarray(ref_out, np.float32)
+            )
+        )
+    )
+    ok = bool(
+        np.allclose(
+            np.asarray(kernel_out, np.float32),
+            np.asarray(ref_out, np.float32),
+            rtol=rtol,
+            atol=atol,
+        )
+    )
+    t_ref = _time(ref_fn, iters=3)
+    t_ker = _time(kernel_fn, iters=3)
+    mode = "compiled" if is_tpu_backend() else "interpret"
+    return [
+        (f"kernel/{name}_ref", t_ref * 1e6, "reference (before)"),
+        (
+            f"kernel/{name}_pallas",
+            t_ker * 1e6,
+            f"{mode}; max|err|={err:.2e} {'OK' if ok else 'REGRESSION'}",
+        ),
+    ]
+
+
+def bench_kernel_regressions() -> list[Row]:
+    """Before/after rows for masked_matmul, flash_attention,
+    decode_attention and mamba_scan. Shapes are deliberately tiny: off-TPU
+    the kernel body runs in the Pallas interpreter, which is orders of
+    magnitude slower than XLA — this harness guards numerics and the shared
+    runtime plumbing, and doubles as the perf harness on a real TPU."""
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    # masked_matmul
+    from repro.kernels.masked_matmul.ops import masked_matmul
+    from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (32, 64))
+    w = jax.random.normal(k2, (64, 48))
+    ok = (jax.random.uniform(k3, (16, 16)) > 0.1).astype(jnp.float32)
+    ref_fn = jax.jit(lambda: masked_matmul_ref(x, w, ok))
+    ker_fn = jax.jit(
+        lambda: masked_matmul(x, w, ok, bm=32, bn=32, bk=32, interpret=not is_tpu_backend())
+    )
+    rows += _regression_row("masked_matmul", ref_fn, ker_fn, ref_fn(), ker_fn())
+
+    # flash_attention
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32))
+    kk = jax.random.normal(ks[1], (1, 2, 64, 32))
+    v = jax.random.normal(ks[2], (1, 2, 64, 32))
+    ref_fn = jax.jit(lambda: attention_ref(q, kk, v, causal=True, window=None))
+    ker_fn = jax.jit(
+        lambda: flash_attention(
+            q, kk, v, causal=True, bq=32, bkv=32, interpret=not is_tpu_backend()
+        )
+    )
+    rows += _regression_row("flash_attention", ref_fn, ker_fn, ref_fn(), ker_fn())
+
+    # decode_attention (int8 KV)
+    from repro.kernels.decode_attention.ops import decode_attention, quantize_kv
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    ks = jax.random.split(key, 3)
+    q1 = jax.random.normal(ks[0], (1, 2, 1, 32))
+    kc = jax.random.normal(ks[1], (1, 2, 128, 32))
+    vc = jax.random.normal(ks[2], (1, 2, 128, 32))
+    ki, ksc = quantize_kv(kc)
+    vi, vsc = quantize_kv(vc)
+    ref_fn = jax.jit(
+        lambda: decode_attention_ref(q1, ki, ksc, vi, vsc, kv_valid_len=100)
+    )
+    ker_fn = jax.jit(
+        lambda: decode_attention(
+            q1, ki, ksc, vi, vsc, 100, bkv=64, interpret=not is_tpu_backend()
+        )
+    )
+    rows += _regression_row("decode_attention", ref_fn, ker_fn, ref_fn(), ker_fn())
+
+    # mamba selective scan
+    from repro.kernels.mamba_scan.ops import selective_scan
+    from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (1, 32, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 32, 16)))
+    a = -jnp.exp(jax.random.normal(ks[2], (16, 4)))
+    bb = jax.random.normal(ks[3], (1, 32, 4))
+    c = jax.random.normal(ks[4], (1, 32, 4))
+    dd = jax.random.normal(ks[5], (16,))
+    ref_fn = jax.jit(lambda: selective_scan_ref(u, dt, a, bb, c, dd)[0])
+    ker_fn = jax.jit(
+        lambda: selective_scan(
+            u, dt, a, bb, c, dd, bd=16, bl=16, interpret=not is_tpu_backend()
+        )[0]
+    )
+    rows += _regression_row("mamba_scan", ref_fn, ker_fn, ref_fn(), ker_fn())
+
+    return rows
+
+
+ALL = [bench_masked_matmul_overhead, bench_attention_impls, bench_kernel_regressions]
+
+
+def print_rows(fns) -> None:
+    """Shared ``name,us_per_call,derived`` CSV printer (also used by
+    benchmarks/run.py so the two outputs cannot drift)."""
+    import traceback
+
+    print("name,us_per_call,derived")
+    for fn in fns:
+        try:
+            for name, us, derived in fn():
+                print(f'{name},{us:.1f},"{derived}"', flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f'{fn.__name__},-1,"ERROR: {e}"', flush=True)
+
+
+if __name__ == "__main__":
+    print_rows(ALL)

@@ -2,22 +2,13 @@
 roofline summary. Prints ``name,us_per_call,derived`` CSV."""
 from __future__ import annotations
 
-import sys
-import traceback
 
 
 def main() -> None:
     import benchmarks.kernel_bench as kb
     import benchmarks.paper_tables as pt
 
-    print("name,us_per_call,derived")
-    for fn in pt.ALL + kb.ALL:
-        try:
-            for name, us, derived in fn():
-                print(f'{name},{us:.1f},"{derived}"', flush=True)
-        except Exception as e:
-            traceback.print_exc()
-            print(f'{fn.__name__},-1,"ERROR: {e}"', flush=True)
+    kb.print_rows(pt.ALL + kb.ALL)
 
     # roofline summary (requires dry-run artifacts; skipped gracefully)
     try:

@@ -57,7 +57,24 @@ class RetrainingPlan:
 
 
 def _cost(table: ResilienceTable, rate: float, stat: str) -> float:
-    return table.required_steps(rate, stat=stat)
+    """Retraining amount at the table's measurement resolution.
+
+    Rewards and prescribed amounts are read at *measured* points: the query
+    rate rounds UP to the first rate Step 1 actually measured at or above
+    it (conservative — the prescribed amount is a real measured requirement
+    for a rate at least as high, never an interpolated undershoot).
+    Comparing sub-knot linear interpolants instead manufactures phantom
+    cost deltas — a fused map sitting between two knots gets charged a
+    fraction of the next knot's cost even when the measurement says the
+    whole band needs the same amount, which silently vetoes every
+    correlated-map merge. Above the measured range the table's capped
+    extrapolation applies unchanged.
+    """
+    r = np.asarray(table.rates)
+    idx = int(np.searchsorted(r, float(rate), side="left"))
+    if idx >= len(r):
+        return float(table.required_steps(float(rate), stat=stat))
+    return float(table.required_steps(float(r[idx]), stat=stat))
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +97,10 @@ def group_and_fuse(
     Sort maps by fault rate ascending; for each map, compare against at most
     M randomly selected other maps, pick the candidate giving the lowest
     fused fault rate (paper SIII-D text), and merge when the saving
-    ``cost(A) + cost(B) - cost(fused)`` is positive. Repeat K passes.
+    ``cost(A) + cost(B) - cost(fused)`` is non-negative (costs evaluated at
+    the resilience table's measurement resolution — see ``_cost``). A
+    zero-saving merge is still a win: it removes a whole retraining job at
+    no modeled step cost, which is the point of Step 3. Repeat K passes.
     Merged maps re-enter the sorted list at their rate position, so they can
     be fused again in later passes.
 
@@ -117,13 +137,17 @@ def group_and_fuse(
             best_pos = int(np.argmin(fused_rates))
             j = pool[best_pos]
             fused_rate = fused_rates[best_pos]
+            fused_cost = _cost(table, fused_rate, stat)
             saving = (
                 _cost(table, rates[i], stat)
                 + _cost(table, rates[j], stat)
-                - _cost(table, fused_rate, stat)
+                - fused_cost
             )
-            feasible = (not require_reachable) or table.reachable(fused_rate, stat)
-            if saving > 0 and feasible:
+            # feasibility must use the same knot-quantized cost the plan
+            # records, or a merge could be accepted whose prescribed job
+            # sits at the cap (= constraint unreachable)
+            feasible = (not require_reachable) or fused_cost < table.cap
+            if saving >= 0 and feasible:
                 fused_map = maps[i].merge(maps[j])
                 fused_link = links[i] + links[j]
                 # remove j first (j > i), then i

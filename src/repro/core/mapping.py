@@ -63,29 +63,65 @@ def masked_weight(w: jax.Array, ok: Optional[jax.Array]) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+_EXACT_ASSIGNMENT_MAX_DOUT = 2048  # Hungarian is O(d_out^3)
+
+
+def _greedy_perm(saliency: np.ndarray, slot_badness: np.ndarray) -> np.ndarray:
+    """Rearrangement-inequality pairing: least-salient logical columns into
+    the worst slots — the exact minimizer of the separable proxy cost
+    ``sum(saliency[j] * badness[perm[j]])``, so it never exceeds the
+    identity (FAP) placement on that proxy."""
+    d_out = len(saliency)
+    slots_by_badness = np.argsort(-slot_badness, kind="stable")  # worst first
+    logical_by_saliency = np.argsort(saliency, kind="stable")  # least salient first
+    perm = np.empty(d_out, dtype=np.int64)
+    perm[logical_by_saliency] = slots_by_badness
+    return perm
+
+
 def fam_permutation(w: np.ndarray, fm: FaultMap) -> np.ndarray:
-    """Choose an output-column permutation mapping the least-salient weight
-    columns onto the faultiest array columns.
+    """Choose an output-column permutation mapping salient weight columns
+    away from faulty array columns.
 
     Column j of W executes on array column ``j % C``; permuting output
-    columns (filters/neurons) re-routes them. Greedy assignment: weight
-    columns sorted by saliency (sum |W[:, j]|) ascending are assigned to
-    column-slots sorted by per-slot fault count descending.
+    columns (filters/neurons) re-routes them. The cost of placing logical
+    column j in slot s is the saliency mass actually zeroed there —
+    ``sum(|W[a, j]|  for GEMM rows a with faulty[a % R, s % C])`` — which
+    depends on *which rows* of the physical column are bypassed, not only
+    on how many (leading dims, e.g. experts, replicate the same mask per
+    GEMM, matching ``periodic_mask``). The assignment minimizing total
+    zeroed mass is solved exactly (Hungarian); the identity (= plain FAP
+    placement) is always a feasible assignment, so FAM never bypasses more
+    saliency mass than FAP. Very wide layers (Hungarian is O(d_out^3)) use
+    the greedy saliency/fault-count pairing, which carries the same
+    never-worse-than-FAP guarantee on its separable proxy cost.
 
     Returns ``perm`` with semantics: logical output j is computed in
     physical slot ``perm[j]``.
     """
-    d_out = w.shape[-1]
-    cols = fm.shape[1]
-    w2 = np.asarray(w).reshape(-1, d_out)
-    saliency = np.abs(w2).sum(axis=0)  # per logical output column
-    # faults a physical slot experiences = column fault count of (slot % C)
-    col_faults = fm.faulty.sum(axis=0)  # (C,)
-    slot_faults = np.array([col_faults[j % cols] for j in range(d_out)])
-    slots_by_faults = np.argsort(-slot_faults, kind="stable")  # worst first
-    logical_by_saliency = np.argsort(saliency, kind="stable")  # least salient first
+    # scipy is a hard dependency of jax itself, so it is always importable
+    # in any environment that can run this repo; a missing scipy should
+    # fail loudly here, not silently degrade the mitigation quality.
+    from scipy.optimize import linear_sum_assignment
+
+    d_in, d_out = w.shape[-2], w.shape[-1]
+    rows, cols = fm.shape
+    w2 = np.abs(np.asarray(w, dtype=np.float64).reshape(-1, d_out))
+    if d_out > _EXACT_ASSIGNMENT_MAX_DOUT:
+        col_faults = fm.faulty.sum(axis=0).astype(np.float64)  # (C,)
+        return _greedy_perm(w2.sum(axis=0), col_faults[np.arange(d_out) % cols])
+    # fold the R-periodic rows first: mask row of flattened row a is its
+    # index WITHIN its GEMM, mod R — leading dims see the same periodic
+    # mask (periodic_mask broadcasts) — then damage[j, c] is the saliency
+    # mass of logical column j zeroed when it runs on physical column c
+    row_idx = np.tile(np.arange(d_in) % rows, w2.shape[0] // d_in)
+    folded = np.zeros((rows, d_out))
+    np.add.at(folded, row_idx, w2)
+    damage = folded.T @ fm.faulty.astype(np.float64)  # (d_out, C)
+    cost = damage[:, np.arange(d_out) % cols].astype(np.float32)  # (d_out, slots)
+    logical, slots = linear_sum_assignment(cost)
     perm = np.empty(d_out, dtype=np.int64)
-    perm[logical_by_saliency] = slots_by_faults
+    perm[logical] = slots
     return perm
 
 

@@ -1,9 +1,15 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
-masked_matmul   — the paper's FAP operator fused into the MXU feed
-flash_attention — blocked online-softmax attention (causal/SWA/GQA)
-mamba_scan      — chunked selective scan with VMEM-resident state
+masked_matmul    — the paper's FAP operator fused into the MXU feed
+flash_attention  — blocked online-softmax attention (causal/SWA/GQA)
+decode_attention — int8-KV decode attention with in-VMEM dequant
+mamba_scan       — chunked selective scan with VMEM-resident state
 
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper w/ CPU fallback), ref.py (pure-jnp oracle used by tests).
+
+``common.py`` is the shared kernel-runtime layer all four build on: the
+JAX-version compiler-params shim, backend autodetection (interpret mode
+off-TPU), block/pad/grid helpers, and per-dtype tolerance defaults.
+See README.md in this directory for the API and the compatibility story.
 """

@@ -1,0 +1,208 @@
+"""Shared kernel-runtime layer for the Pallas TPU kernels.
+
+Every kernel package (masked_matmul, flash_attention, decode_attention,
+mamba_scan) builds on this module instead of re-implementing the same
+plumbing four slightly-different ways:
+
+* **JAX-version compatibility** — the TPU compiler-params class has been
+  renamed across JAX releases (``pltpu.TPUCompilerParams`` in 0.4.x/0.5.x,
+  ``pltpu.CompilerParams`` in newer releases; very old versions take a raw
+  ``{"mosaic": {...}}`` dict).  :func:`tpu_compiler_params` is the single
+  place in the repo that touches either spelling.
+* **Backend autodetection** — :func:`resolve_interpret` turns
+  ``interpret=None`` into ``True`` off-TPU so every kernel entry point runs
+  on CPU (Pallas interpret mode) without the caller knowing the backend.
+* **Block/grid geometry** — :func:`choose_block`, :func:`pad_to_multiple`,
+  :func:`pad_axis_to`, :func:`pad_axes_to` and :func:`grid_for` replace the
+  four divergent pad/block copies that used to live in the ``ops.py``
+  wrappers (one of which silently rejected non-block-multiple shapes).
+* **Numerical tolerances** — :func:`dtype_tol` / :func:`assert_close` give
+  tests and benchmarks one per-dtype tolerance table instead of ad-hoc
+  constants.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "tpu_compiler_params",
+    "is_tpu_backend",
+    "resolve_interpret",
+    "choose_block",
+    "pad_to_multiple",
+    "pad_amount",
+    "pad_axis_to",
+    "pad_axes_to",
+    "grid_for",
+    "dtype_tol",
+    "assert_close",
+    "DEFAULT_TOLS",
+]
+
+
+# ---------------------------------------------------------------------------
+# JAX-version compatibility shim
+# ---------------------------------------------------------------------------
+
+
+def tpu_compiler_params(
+    *,
+    dimension_semantics: Optional[Sequence[str]] = None,
+    **kwargs: Any,
+):
+    """Build the ``compiler_params`` argument for ``pl.pallas_call``.
+
+    Resolves, at call time, whichever TPU compiler-params spelling the
+    installed JAX provides:
+
+    * ``pltpu.CompilerParams``    (newer JAX)
+    * ``pltpu.TPUCompilerParams`` (JAX 0.4.x / 0.5.x)
+    * a raw ``{"mosaic": {...}}`` dict (very old JAX)
+
+    This is the only place in the repository allowed to reference either
+    class name — kernels must call this instead.
+    """
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(pltpu, "TPUCompilerParams", None)
+    params = dict(kwargs)
+    if dimension_semantics is not None:
+        params["dimension_semantics"] = tuple(dimension_semantics)
+    if cls is None:  # pre-dataclass JAX: pallas_call takes a nested dict
+        return {"mosaic": params}
+    return cls(**params)
+
+
+# ---------------------------------------------------------------------------
+# Backend autodetection
+# ---------------------------------------------------------------------------
+
+
+def is_tpu_backend() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a tri-state ``interpret`` flag against the active backend.
+
+    ``None`` means "autodetect": compiled on TPU, interpret mode everywhere
+    else — so the same kernel call works on a CPU-only host (tests, CI)
+    without the caller branching on the backend.
+    """
+    if interpret is None:
+        return not is_tpu_backend()
+    return bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# Block sizes, padding, grids
+# ---------------------------------------------------------------------------
+
+
+def choose_block(dim: int, requested: int, *, multiple_of: int = 1) -> int:
+    """Clamp a requested block size to ``dim`` and keep it compatible with a
+    required period (e.g. a mask period): the result always divides the
+    period or is a multiple of it, so periodic index maps stay aligned.
+    Blocks below the period that don't divide it snap up to the period;
+    incompatible blocks above it are replaced by the period multiple that
+    minimizes the padding of ``dim`` (largest such block on ties)."""
+    dim, requested, period = int(dim), int(requested), int(multiple_of)
+    b = max(1, min(requested, dim))
+    if period > 1:
+        if b < period:
+            if period % b:
+                b = period
+        elif b % period:
+            b = min(
+                range(period, b + 1, period),
+                key=lambda c: (pad_to_multiple(dim, c) - dim, -c),
+            )
+    return b
+
+
+def pad_to_multiple(n: int, block: int) -> int:
+    """Smallest multiple of ``block`` that is >= ``n``."""
+    return -(-int(n) // int(block)) * int(block)
+
+
+def pad_amount(n: int, block: int) -> int:
+    """How many trailing elements must be added so ``block`` divides ``n``."""
+    return (-int(n)) % int(block)
+
+
+def pad_axis_to(x: jax.Array, axis: int, target: int, value: float = 0.0) -> jax.Array:
+    """Zero-pad (by default) one axis of ``x`` up to ``target`` length."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    if cur > target:
+        raise ValueError(f"axis {axis} of {x.shape} already exceeds target {target}")
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pad_axes_to(x: jax.Array, targets: Mapping[int, int], value: float = 0.0) -> jax.Array:
+    """Zero-pad several axes of ``x`` at once; no-op axes may be omitted."""
+    widths = [(0, 0)] * x.ndim
+    changed = False
+    for axis, target in targets.items():
+        cur = x.shape[axis]
+        if cur > target:
+            raise ValueError(f"axis {axis} of {x.shape} already exceeds target {target}")
+        if cur != target:
+            widths[axis] = (0, target - cur)
+            changed = True
+    return jnp.pad(x, widths, constant_values=value) if changed else x
+
+
+def grid_for(dims: Sequence[int], blocks: Sequence[int]) -> tuple[int, ...]:
+    """Grid extents for ``dims`` tiled by ``blocks`` (dims must divide)."""
+    if len(dims) != len(blocks):
+        raise ValueError(f"{len(dims)} dims vs {len(blocks)} blocks")
+    out = []
+    for d, b in zip(dims, blocks):
+        if d % b:
+            raise ValueError(f"dim {d} not divisible by block {b} ({dims} / {blocks})")
+        out.append(d // b)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Unified per-dtype tolerance defaults (tests + benchmarks)
+# ---------------------------------------------------------------------------
+
+DEFAULT_TOLS: dict[Any, float] = {
+    jnp.dtype(jnp.bfloat16): 2e-2,
+    jnp.dtype(jnp.float16): 1e-2,
+    jnp.dtype(jnp.float32): 2e-5,
+    jnp.dtype(jnp.float64): 1e-12,
+}
+
+
+def dtype_tol(dtype: Any, *, atol_scale: float = 10.0) -> tuple[float, float]:
+    """(rtol, atol) defaults for comparing a kernel against its reference."""
+    rtol = DEFAULT_TOLS.get(jnp.dtype(dtype), 2e-5)
+    return rtol, rtol * atol_scale
+
+
+def assert_close(actual, expected, dtype: Any = None, *, atol_scale: float = 10.0) -> None:
+    """np.testing.assert_allclose with the shared per-dtype tolerances.
+
+    Both arrays are compared in float32 so bfloat16 outputs don't lose
+    precision a second time inside numpy."""
+    if dtype is None:
+        dtype = getattr(actual, "dtype", jnp.float32)
+    rtol, atol = dtype_tol(dtype, atol_scale=atol_scale)
+    np.testing.assert_allclose(
+        np.asarray(actual, np.float32),
+        np.asarray(expected, np.float32),
+        rtol=rtol,
+        atol=atol,
+    )

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import grid_for, resolve_interpret, tpu_compiler_params
+
 LANES = 128
 NEG_INF = -1e30
 
@@ -98,13 +100,14 @@ def decode_attention_pallas(
     scale: Optional[float] = None,
     bq: int = 8,
     bkv: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     bh, bq_, d = q.shape
     skv = k_i8.shape[1]
-    assert bq_ == bq and skv % bkv == 0
+    assert bq_ == bq
     scale = scale if scale is not None else 1.0 / (d**0.5)
-    nk = skv // bkv
+    (nk,) = grid_for((skv,), (bkv,))
     grid = (bh, nk)
 
     # index maps receive the scalar-prefetch ref as a trailing argument
@@ -133,7 +136,7 @@ def decode_attention_pallas(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((bh, bq, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -10,6 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to
 from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
@@ -34,7 +35,7 @@ def decode_attention(
     interpret: bool | None = None,
 ) -> jax.Array:
     if interpret is None:
-        if jax.default_backend() != "tpu":
+        if not is_tpu_backend():
             return decode_attention_ref(
                 q, k_i8, k_scale, v_i8, v_scale,
                 kv_valid_len=kv_valid_len, scale=scale,
@@ -45,12 +46,12 @@ def decode_attention(
     hkv, skv = k_i8.shape[1], k_i8.shape[2]
     group = hq // hkv
     bq = 8  # TPU sublane minimum; decode q is 1 row padded
-    qf = jnp.pad(q.reshape(b * hq, sq, d), ((0, 0), (0, bq - sq), (0, 0)))
-    pad_kv = (-skv) % bkv
-    kf = jnp.pad(k_i8.reshape(b * hkv, skv, d), ((0, 0), (0, pad_kv), (0, 0)))
-    vf = jnp.pad(v_i8.reshape(b * hkv, skv, d), ((0, 0), (0, pad_kv), (0, 0)))
-    ksf = jnp.pad(k_scale.reshape(b * hkv, skv), ((0, 0), (0, pad_kv)))
-    vsf = jnp.pad(v_scale.reshape(b * hkv, skv), ((0, 0), (0, pad_kv)))
+    qf = pad_axes_to(q.reshape(b * hq, sq, d), {1: bq})
+    skv_p = skv + pad_amount(skv, bkv)
+    kf = pad_axes_to(k_i8.reshape(b * hkv, skv, d), {1: skv_p})
+    vf = pad_axes_to(v_i8.reshape(b * hkv, skv, d), {1: skv_p})
+    ksf = pad_axes_to(k_scale.reshape(b * hkv, skv), {1: skv_p})
+    vsf = pad_axes_to(v_scale.reshape(b * hkv, skv), {1: skv_p})
     valid = jnp.asarray(kv_valid_len, jnp.int32).reshape(1)
 
     o = decode_attention_pallas(

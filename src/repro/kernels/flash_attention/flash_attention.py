@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import grid_for, resolve_interpret, tpu_compiler_params
+
 LANES = 128
 NEG_INF = -1e30
 
@@ -117,17 +119,16 @@ def flash_attention_pallas(
     scale: Optional[float] = None,
     bq: int = 128,
     bkv: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     bh, sq, d = q.shape
     bhkv, skv, _ = k.shape
-    hq_total_per_b = None  # flattened; head arithmetic below
     scale = scale if scale is not None else 1.0 / (d**0.5)
     bq = min(bq, sq)
     bkv = min(bkv, skv)
-    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
-    nk = skv // bkv
-    grid = (bh, sq // bq, nk)
+    (nq, nk) = grid_for((sq, skv), (bq, bkv))
+    grid = (bh, nq, nk)
 
     # q index bhq -> kv index: with q laid out as (B, Hkv, group) flattened,
     # kv row = bhq // hq_per_kv
@@ -162,7 +163,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, LANES), jnp.float32),
             pltpu.VMEM((bq, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

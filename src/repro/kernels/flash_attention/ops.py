@@ -9,8 +9,8 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -29,7 +29,7 @@ def flash_attention(
     interpret: bool | None = None,
 ) -> jax.Array:
     if interpret is None:
-        if jax.default_backend() != "tpu":
+        if not is_tpu_backend():
             return attention_ref(
                 q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
             )
@@ -41,16 +41,14 @@ def flash_attention(
     group = hq // hkv
 
     bq_ = min(bq, sq)
-    pad_q = (-sq) % max(bq_, 8)
+    pad_q = pad_amount(sq, max(bq_, 8))
     bq_ = min(max(bq_, 8), sq + pad_q)
     bkv_ = min(bkv, skv)
-    pad_kv = (-skv) % bkv_
+    pad_kv = pad_amount(skv, bkv_)
 
-    qf = q.reshape(b * hq, sq, d)
+    qf = pad_axes_to(q.reshape(b * hq, sq, d), {1: sq + pad_q})
     kf = k.reshape(b * hkv, skv, d)
     vf = v.reshape(b * hkv, skv, d)
-    if pad_q:
-        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
     if pad_kv:
         # pad keys at the END; causal masking vs real rows keeps them dead
         # only when padded cols are masked -> extend window mask via NEG_INF
@@ -59,8 +57,8 @@ def flash_attention(
         # positions >= skv and every real row r has r < skv, so causal
         # masking kills them. Non-causal callers must pass aligned skv.
         assert causal, "non-causal attention requires skv % bkv == 0"
-        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
-        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+        kf = pad_axes_to(kf, {1: skv + pad_kv})
+        vf = pad_axes_to(vf, {1: skv + pad_kv})
 
     o = flash_attention_pallas(
         qf,

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import grid_for, resolve_interpret, tpu_compiler_params
+
 
 def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hlast_ref, h_ref, *, bl: int, nl: int):
     il = pl.program_id(2)
@@ -59,16 +61,16 @@ def selective_scan_pallas(
     *,
     bd: int = 256,
     bl: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ):
     """Returns (y (B, L, D), h_final (B, D, N))."""
+    interpret = resolve_interpret(interpret)
     bsz, length, dim = u.shape
     n = a.shape[1]
     bd = min(bd, dim)
     bl = min(bl, length)
-    assert dim % bd == 0 and length % bl == 0, (dim, bd, length, bl)
-    nl = length // bl
-    grid = (bsz, dim // bd, nl)
+    (nd, nl) = grid_for((dim, length), (bd, bl))
+    grid = (bsz, nd, nl)
     d2 = d.reshape(1, dim)
 
     kernel = functools.partial(_kernel, bl=bl, nl=nl)
@@ -92,7 +94,7 @@ def selective_scan_pallas(
             jax.ShapeDtypeStruct((bsz, dim, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

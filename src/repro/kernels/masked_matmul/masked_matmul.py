@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import grid_for, resolve_interpret, tpu_compiler_params
+
 
 def _mask_axis_plan(block: int, period: int):
     """Returns (mask_block, index_fn, tile_factor) for one axis."""
@@ -70,24 +72,24 @@ def masked_matmul_pallas(
     bn: int = 512,
     bk: int = 512,
     out_dtype=None,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """y[M, N] = x[M, K] @ (w[K, N] * periodic(ok[R, C])).
 
     Shapes must be multiples of the block sizes (ops.py pads otherwise).
+    ``interpret=None`` autodetects the backend (interpret mode off-TPU).
     """
+    interpret = resolve_interpret(interpret)
     (m, kdim), (k2, n) = x.shape, w.shape
     assert kdim == k2, (x.shape, w.shape)
     r, c = ok.shape
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    if m % bm or n % bn or kdim % bk:
-        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by blocks ({bm},{bk},{bn})")
     out_dtype = out_dtype or x.dtype
 
     mask_br, row_idx, tile_r = _mask_axis_plan(bk, r)
     mask_bc, col_idx, tile_c = _mask_axis_plan(bn, c)
 
-    grid = (m // bm, n // bn, kdim // bk)
+    grid = grid_for((m, n, kdim), (bm, bn, bk))
     kernel = functools.partial(
         _kernel, nk=grid[2], tile_r=tile_r, tile_c=tile_c
     )
@@ -102,7 +104,7 @@ def masked_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,20 +1,22 @@
 """jit'd public wrapper for the fault-masked matmul kernel.
 
 Handles arbitrary leading batch dims, pads non-aligned shapes up to block
-multiples, and falls back to the jnp reference on non-TPU backends (unless
-``interpret=True`` is forced, e.g. in tests).
-"""
+multiples (via the shared kernel-runtime helpers), and falls back to the
+jnp reference on non-TPU backends (unless ``interpret=True`` is forced,
+e.g. in tests)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import (
+    choose_block,
+    is_tpu_backend,
+    pad_axes_to,
+    pad_to_multiple,
+)
 from repro.kernels.masked_matmul.masked_matmul import masked_matmul_pallas
 from repro.kernels.masked_matmul.ref import masked_matmul_ref
-
-
-def _pad_to(v: int, b: int) -> int:
-    return (v + b - 1) // b * b
 
 
 def masked_matmul(
@@ -29,7 +31,7 @@ def masked_matmul(
 ) -> jax.Array:
     """y = x @ (w * periodic_mask(ok)); x: (..., K), w: (K, N), ok: (R, C)."""
     if interpret is None:
-        if jax.default_backend() != "tpu":
+        if not is_tpu_backend():
             return masked_matmul_ref(x, w, ok)
         interpret = False
 
@@ -41,18 +43,16 @@ def masked_matmul(
     x2 = x.reshape(m, kdim)
 
     r, c = ok.shape
-    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, kdim)
     # block sizes must stay compatible with the mask period
-    if bk_ < r and r % bk_:
-        bk_ = r
-    if bn_ < c and c % bn_:
-        bn_ = c
-    mp, np_, kp = _pad_to(m, bm_), _pad_to(n, bn_), _pad_to(kdim, bk_)
-    # padding K breaks the mask period alignment; pad K only in multiples of r
-    if kp != kdim:
-        kp = _pad_to(kdim, max(bk_, r) if bk_ % r == 0 or r % bk_ == 0 else bk_ * r)
-    xp = jnp.pad(x2, ((0, mp - m), (0, kp - kdim))) if (mp != m or kp != kdim) else x2
-    wp = jnp.pad(w, ((0, kp - kdim), (0, np_ - n))) if (kp != kdim or np_ != n) else w
+    bm_ = choose_block(m, bm)
+    bn_ = choose_block(n, bn, multiple_of=c)
+    bk_ = choose_block(kdim, bk, multiple_of=r)
+    mp, np_ = pad_to_multiple(m, bm_), pad_to_multiple(n, bn_)
+    # padding K must preserve mask-period alignment: choose_block guarantees
+    # bk_ divides r or is a multiple of it, so lcm(bk_, r) == max(bk_, r)
+    kp = kdim if kdim % bk_ == 0 else pad_to_multiple(kdim, max(bk_, r))
+    xp = pad_axes_to(x2, {0: mp, 1: kp})
+    wp = pad_axes_to(w, {0: kp, 1: np_})
 
     # NOTE: zero-padded K rows multiply healthy/faulty mask entries of the
     # wrapped period — harmless because the padded x columns are zero.

@@ -74,7 +74,9 @@ def resolve_spec(axes: LogicalAxes, shape: Sequence[int], ctx: MeshContext) -> P
                     continue
                 size = ctx.axis_size(cand)
                 if dim % unit == 0 and (dim // unit) % size == 0 and size > 1:
-                    entry = cand if isinstance(cand, str) else tuple(cand)
+                    # singleton axis tuples must collapse to bare names:
+                    # PartitionSpec(('data',), 'model') != PartitionSpec('data', 'model')
+                    entry = names[0] if len(names) == 1 else tuple(names)
                     used.update(names)
                     break
         parts.append(entry)

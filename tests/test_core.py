@@ -1,9 +1,35 @@
 """Property tests (hypothesis) + unit tests for the eFAT core:
-fault-map algebra (Eq. 2/3), Algo 1, resilience interpolation, Algo 2."""
+fault-map algebra (Eq. 2/3), Algo 1, resilience interpolation, Algo 2.
+
+``hypothesis`` is optional: in offline environments where it cannot be
+installed, only the property-based tests are skipped — the module still
+collects and the plain unit tests run."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in offline environments
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis is not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``: strategy constructors are
+        only evaluated inside ``@given(...)`` decorator arguments, so inert
+        placeholders are enough for collection."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 from repro.core import (
     FaultMap,
@@ -217,8 +243,9 @@ def test_group_and_fuse_partitions_chips(seed, n):
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000))
 def test_efat_never_costs_more_than_individual(seed):
-    """Each Algo-2 merge requires saving > 0, so the plan's table cost can
-    only improve on per-chip selection."""
+    """Each Algo-2 merge requires saving >= 0 (zero-saving merges still cut
+    a retraining job), so the plan's table cost never increases over
+    per-chip selection."""
     maps = correlated_family(seed, 16, 32, 32, base_rate=0.05, idio_rate=0.015)
     t = _table()
     efat = group_and_fuse(maps, t, m_comparisons=6, k_iterations=2, seed=seed)

@@ -1,0 +1,225 @@
+"""Unit tests for the shared kernel-runtime layer (repro.kernels.common):
+the JAX-version compiler-params shim, pad/unpad geometry, backend
+autodetection, and the per-dtype tolerance table."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import common
+
+
+# ---------------------------------------------------------------------------
+# compiler-params shim (both JAX API spellings + dict fallback)
+# ---------------------------------------------------------------------------
+
+
+class _NewStyleParams:
+    """Stands in for pltpu.CompilerParams (newer JAX)."""
+
+    def __init__(self, dimension_semantics=None, **kw):
+        self.dimension_semantics = dimension_semantics
+        self.extra = kw
+
+
+class _OldStyleParams:
+    """Stands in for pltpu.TPUCompilerParams (JAX 0.4.x/0.5.x)."""
+
+    def __init__(self, dimension_semantics=None, **kw):
+        self.dimension_semantics = dimension_semantics
+        self.extra = kw
+
+
+def test_shim_prefers_new_spelling(monkeypatch):
+    fake = types.SimpleNamespace(
+        CompilerParams=_NewStyleParams, TPUCompilerParams=_OldStyleParams
+    )
+    monkeypatch.setattr(common, "pltpu", fake)
+    out = common.tpu_compiler_params(dimension_semantics=("parallel", "arbitrary"))
+    assert isinstance(out, _NewStyleParams)
+    assert out.dimension_semantics == ("parallel", "arbitrary")
+
+
+def test_shim_falls_back_to_old_spelling(monkeypatch):
+    fake = types.SimpleNamespace(TPUCompilerParams=_OldStyleParams)
+    monkeypatch.setattr(common, "pltpu", fake)
+    out = common.tpu_compiler_params(
+        dimension_semantics=("parallel",), vmem_limit_bytes=1 << 20
+    )
+    assert isinstance(out, _OldStyleParams)
+    assert out.dimension_semantics == ("parallel",)
+    assert out.extra == {"vmem_limit_bytes": 1 << 20}
+
+
+def test_shim_dict_fallback_when_neither_exists(monkeypatch):
+    monkeypatch.setattr(common, "pltpu", types.SimpleNamespace())
+    out = common.tpu_compiler_params(dimension_semantics=("arbitrary",))
+    assert out == {"mosaic": {"dimension_semantics": ("arbitrary",)}}
+
+
+def test_shim_works_against_installed_jax():
+    # whatever the installed JAX calls it, the shim must build something
+    out = common.tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
+    assert out is not None
+
+
+# ---------------------------------------------------------------------------
+# pad / unpad round-trips on non-block-multiple shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,b", [(1, 8), (7, 8), (8, 8), (33, 32), (100, 64)])
+def test_pad_to_multiple(n, b):
+    p = common.pad_to_multiple(n, b)
+    assert p >= n and p % b == 0 and p - n < b
+    assert common.pad_amount(n, b) == p - n
+
+
+@pytest.mark.parametrize("shape,targets", [((33, 100), {0: 64, 1: 128}), ((5, 7, 3), {1: 8})])
+def test_pad_axes_round_trip(shape, targets):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=shape), jnp.float32)
+    xp = common.pad_axes_to(x, targets)
+    for axis in range(x.ndim):
+        assert xp.shape[axis] == targets.get(axis, x.shape[axis])
+    sl = tuple(slice(0, s) for s in shape)
+    np.testing.assert_array_equal(np.asarray(xp[sl]), np.asarray(x))
+    # padded region is zero
+    assert float(jnp.sum(jnp.abs(xp))) == pytest.approx(float(jnp.sum(jnp.abs(x))), rel=1e-6)
+
+
+def test_pad_axis_rejects_shrinking():
+    x = jnp.ones((8, 8))
+    with pytest.raises(ValueError):
+        common.pad_axis_to(x, 0, 4)
+
+
+def test_choose_block_respects_period():
+    assert common.choose_block(256, 64) == 64
+    assert common.choose_block(48, 64) == 48  # clamped to dim
+    # block below the mask period that doesn't divide it -> snap to period
+    assert common.choose_block(256, 24, multiple_of=32) == 32
+    # block that divides the period stays
+    assert common.choose_block(256, 16, multiple_of=32) == 16
+    # incompatible block above the period -> the period multiple with the
+    # least padding of dim (24 pads 100 -> 120; 96 would pad to 192)
+    assert common.choose_block(100, 512, multiple_of=24) == 24
+    # on equal padding, prefer the largest compatible block
+    assert common.choose_block(96, 512, multiple_of=24) == 96
+
+
+def test_masked_matmul_dim_exceeds_non_power_of_two_period():
+    """dim > mask period but not a period multiple must pad, not raise."""
+    from repro.kernels.masked_matmul.ops import masked_matmul
+    from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (64, 96))
+    w = jax.random.normal(key, (96, 100))
+    ok = (jax.random.uniform(key, (24, 24)) > 0.2).astype(jnp.float32)
+    out = masked_matmul(x, w, ok, interpret=True)
+    assert out.shape == (64, 100)
+    common.assert_close(out, masked_matmul_ref(x, w, ok), jnp.float32)
+
+
+def test_grid_for():
+    assert common.grid_for((64, 128), (32, 32)) == (2, 4)
+    with pytest.raises(ValueError):
+        common.grid_for((65, 128), (32, 32))
+    with pytest.raises(ValueError):
+        common.grid_for((64,), (32, 32))
+
+
+def test_kernel_pad_round_trip_non_multiple_shapes():
+    """ops-level check: ragged shapes go through pad -> kernel -> unpad."""
+    from repro.kernels.masked_matmul.ops import masked_matmul
+    from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (19, 70))
+    w = jax.random.normal(key, (70, 45))
+    ok = (jax.random.uniform(key, (8, 8)) > 0.2).astype(jnp.float32)
+    out = masked_matmul(x, w, ok, bm=16, bn=16, bk=16, interpret=True)
+    assert out.shape == (19, 45)
+    common.assert_close(out, masked_matmul_ref(x, w, ok), jnp.float32)
+
+
+def test_mamba_pad_round_trip_non_multiple_shapes():
+    from repro.kernels.mamba_scan.ops import selective_scan
+    from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    b, l, d, n = 2, 37, 11, 4  # neither l nor d block-multiples
+    u = jax.random.normal(ks[0], (b, l, d))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, d)))
+    a = -jnp.exp(jax.random.normal(ks[2], (d, n)))
+    bb = jax.random.normal(ks[3], (b, l, n))
+    c = jax.random.normal(ks[4], (b, l, n))
+    dd = jax.random.normal(ks[5], (d,))
+    yr, hr = selective_scan_ref(u, dt, a, bb, c, dd)
+    yk, hk = selective_scan(u, dt, a, bb, c, dd, bd=8, bl=16, interpret=True)
+    assert yk.shape == yr.shape and hk.shape == hr.shape
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=2e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# backend autodetection
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_interpret_autodetects_cpu():
+    # the test suite pins JAX_PLATFORMS=cpu, so autodetection must pick
+    # interpret mode and explicit flags must pass through untouched
+    assert common.is_tpu_backend() is False
+    assert common.resolve_interpret(None) is True
+    assert common.resolve_interpret(True) is True
+    assert common.resolve_interpret(False) is False
+
+
+def test_resolve_interpret_compiles_on_tpu(monkeypatch):
+    monkeypatch.setattr(common.jax, "default_backend", lambda: "tpu")
+    assert common.is_tpu_backend() is True
+    assert common.resolve_interpret(None) is False
+    assert common.resolve_interpret(True) is True
+
+
+def test_kernel_entrypoint_autodetects_interpret_on_cpu():
+    """Calling the raw pallas entry point with no interpret flag must run on
+    a CPU-only host (previously: hard default interpret=False -> crash)."""
+    from repro.kernels.masked_matmul.masked_matmul import masked_matmul_pallas
+    from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (32, 32))
+    w = jax.random.normal(key, (32, 32))
+    ok = (jax.random.uniform(key, (16, 16)) > 0.3).astype(jnp.float32)
+    out = masked_matmul_pallas(x, w, ok, bm=16, bn=16, bk=16)
+    common.assert_close(out, masked_matmul_ref(x, w, ok), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# tolerance table
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_tol_table():
+    rtol32, atol32 = common.dtype_tol(jnp.float32)
+    rtol16, atol16 = common.dtype_tol(jnp.bfloat16)
+    assert rtol16 > rtol32
+    assert atol32 == pytest.approx(rtol32 * 10)
+    # unknown dtypes fall back to the float32 default
+    assert common.dtype_tol(jnp.int8)[0] == rtol32
+
+
+def test_assert_close_uses_dtype_tolerance():
+    a = jnp.ones((4, 4), jnp.bfloat16)
+    b = a * (1.0 + 1e-3)  # within bf16 tolerance, outside fp32 tolerance
+    common.assert_close(a, b, jnp.bfloat16)
+    with pytest.raises(AssertionError):
+        common.assert_close(
+            jnp.ones((4, 4)), jnp.ones((4, 4)) * 1.01, jnp.float32
+        )

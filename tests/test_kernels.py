@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.common import dtype_tol
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.masked_matmul.ops import masked_matmul
@@ -16,7 +17,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _tol(dtype):
-    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    return dtype_tol(dtype)[0]
 
 
 # ---------------------------------------------------------------------------
