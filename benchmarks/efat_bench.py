@@ -1,0 +1,107 @@
+"""Step-1 wall-clock harness: serial reference vs population FAT engine.
+
+Runs the same resilience sweep (rates x repeats, identical fault-map grid
+and identical base params) through both engines and reports wall-clock,
+verifying on the way that the two engines produce the SAME resilience
+table — the speedup is only real if the math is unchanged.
+
+Companion to benchmarks/kernel_bench.py: where that file guards the Pallas
+kernel layer row by row, this one guards the population training path. The
+output is JSON (one document with per-engine rows + the speedup) so CI can
+parse it; ``--smoke`` shrinks the sweep to CI scale and only checks
+equivalence, the full run is the perf claim (>= 3x on CPU at repeats >= 4).
+
+Usage:
+    PYTHONPATH=src python benchmarks/efat_bench.py [--smoke] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import fault_rate_list
+from repro.core.resilience import measure_resilience
+from repro.train.fat_trainer import ClassifierFATTrainer
+
+
+def run_bench(smoke: bool) -> dict:
+    if smoke:
+        sweep = dict(repeats=2, max_steps=80, seed=3)
+        rates = fault_rate_list([0.05], max_fr=0.12, max_interval=0.04, step=0.8)
+        pretrain = 200
+    else:
+        # the paper's interesting regime: tight constraint, rates up to 0.3,
+        # so high-rate repeats genuinely need tens-to-hundreds of FAT steps
+        sweep = dict(repeats=4, max_steps=400, seed=3)
+        rates = fault_rate_list([0.04], max_fr=0.3, max_interval=0.05, step=0.5)
+        pretrain = 300
+
+    cfg = get_arch("paper-mlp")
+    pop_tr = ClassifierFATTrainer(cfg, pretrain_steps=pretrain, eval_batches=2, population_size=32)
+    ser_tr = ClassifierFATTrainer(cfg, pretrain_steps=0, eval_batches=2, engine="serial")
+    ser_tr.base_params = pop_tr.base_params  # identical starting point
+    constraint = pop_tr.baseline_accuracy - (0.05 if smoke else 0.02)
+
+    def sweep_once(trainer, engine):
+        t0 = time.time()
+        table = measure_resilience(
+            trainer, rates, constraint, array_shape=(32, 32), engine=engine, **sweep
+        )
+        return time.time() - t0, table
+
+    # population first so its compile time is honestly inside its wall-clock
+    t_pop, table_pop = sweep_once(pop_tr, None)
+    t_ser, table_ser = sweep_once(ser_tr, "serial")
+
+    tables_equal = bool(
+        np.array_equal(table_pop.rates, table_ser.rates)
+        and np.array_equal(table_pop.min_steps, table_ser.min_steps)
+        and np.array_equal(table_pop.mean_steps, table_ser.mean_steps)
+        and np.array_equal(table_pop.max_steps_stat, table_ser.max_steps_stat)
+    )
+    speedup = t_ser / t_pop if t_pop > 0 else float("inf")
+    return dict(
+        mode="smoke" if smoke else "full",
+        rates=[round(float(r), 5) for r in rates],
+        repeats=sweep["repeats"],
+        max_steps=sweep["max_steps"],
+        constraint=round(float(constraint), 5),
+        rows=[
+            dict(name="efat/step1_serial", seconds=round(t_ser, 3), engine="serial"),
+            dict(name="efat/step1_population", seconds=round(t_pop, 3), engine="population"),
+        ],
+        speedup=round(speedup, 2),
+        tables_equal=tables_equal,
+        max_steps_stat=[float(v) for v in table_pop.max_steps_stat],
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-scale sweep; equivalence only")
+    ap.add_argument("--out", default=None, help="also write the JSON report to this file")
+    args = ap.parse_args(argv)
+
+    report = run_bench(smoke=args.smoke)
+    doc = json.dumps(report, indent=2)
+    print(doc)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc)
+
+    if not report["tables_equal"]:
+        print("FAIL: population and serial engines disagree on the resilience table", file=sys.stderr)
+        return 1
+    if not args.smoke and report["speedup"] < 3.0:
+        print(f"FAIL: population speedup {report['speedup']}x below the 3x target", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,6 @@
 """eFAT core: fault maps, systolic mapping, resilience analysis,
 grouping & fusion, and the end-to-end orchestrator (paper Fig. 7)."""
-from repro.core.efat import EFAT, EFATConfig, EFATResult
+from repro.core.efat import EFAT, BatchFATTrainerFull, EFATConfig, EFATResult
 from repro.core.faults import (
     FaultMap,
     clustered_fault_map,
@@ -25,8 +25,16 @@ from repro.core.mapping import (
     masked_weight,
     periodic_mask,
 )
-from repro.core.masking import FaultContext, fault_einsum, fault_linear, from_fault_map, healthy
+from repro.core.masking import (
+    FaultContext,
+    fault_einsum,
+    fault_linear,
+    from_fault_map,
+    healthy,
+    stack_contexts,
+)
 from repro.core.resilience import (
+    BatchFATTrainer,
     ResilienceTable,
     ResilienceTable2D,
     fault_rate_list,
@@ -37,6 +45,8 @@ __all__ = [
     "EFAT",
     "EFATConfig",
     "EFATResult",
+    "BatchFATTrainer",
+    "BatchFATTrainerFull",
     "FaultMap",
     "FaultContext",
     "RetrainingPlan",
@@ -64,4 +74,5 @@ __all__ = [
     "periodic_mask",
     "random_fault_map",
     "random_pair_merge_plan",
+    "stack_contexts",
 ]

@@ -96,7 +96,7 @@ def measure_resilience_2d(
                 used = max_steps
                 for s in range(1, max_steps + 1):
                     batch = trainer.data.batch_at(s, trainer.batch_size)
-                    (_, _m), g = trainer._grad(params, batch, ctx)
+                    (_, _m), g = trainer.grad_fn(params, batch, ctx)
                     params, opt, _ = adamw_update(g, opt, params, trainer.opt_cfg)
                     # hardware projection: stuck cells cannot store updates
                     params = project_params(params, None, fm_sa1, magnitude=magnitude)

@@ -8,6 +8,7 @@ for comparison (paper SIV-C).
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Protocol, Sequence
@@ -28,7 +29,7 @@ from repro.core.resilience import (
     measure_resilience,
 )
 
-__all__ = ["EFATConfig", "EFATResult", "EFAT", "FATTrainerFull"]
+__all__ = ["EFATConfig", "EFATResult", "EFAT", "FATTrainerFull", "BatchFATTrainerFull"]
 
 
 class FATTrainerFull(Protocol):
@@ -46,6 +47,26 @@ class FATTrainerFull(Protocol):
     def evaluate(self, params: Any, fault_map: FaultMap) -> float:
         """Deployed metric of params on a chip with this fault map."""
         ...
+
+
+class BatchFATTrainerFull(FATTrainerFull, Protocol):
+    """Batch extension of the full protocol (repro.train.population): a
+    trainer that can run every retraining job of a plan as one population
+    and evaluate a batch of (params, chip) pairs in one vmapped program.
+    ``execute_plan`` uses these when present; the single-map methods remain
+    the serial fallback."""
+
+    def steps_to_constraint_batch(
+        self, fault_maps: Sequence[FaultMap], constraint: float, max_steps: int
+    ) -> list[Optional[int]]: ...
+
+    def train_batch(
+        self, fault_maps: Sequence[FaultMap], steps: Sequence[int]
+    ) -> list[Any]: ...
+
+    def evaluate_batch(
+        self, params_list: Sequence[Any], fault_maps: Sequence[FaultMap]
+    ) -> list[float]: ...
 
 
 @dataclass
@@ -108,7 +129,15 @@ class EFAT:
         self,
         fault_maps: Sequence[FaultMap],
         progress: Optional[Callable[[str], None]] = None,
+        cache_path: Optional[str] = None,
     ) -> ResilienceTable:
+        """Measure (or load) the Step-1 resilience table.
+
+        ``cache_path``: JSON file reused across runs. A cached table is
+        only accepted when its recorded measurement config (rates,
+        constraint, repeats, cap, array shape, seed) matches this run's —
+        otherwise it is re-measured and the file rewritten.
+        """
         cfg = self.config
         rates = fault_rate_list(
             [fm.fault_rate for fm in fault_maps],
@@ -117,6 +146,25 @@ class EFAT:
             step=cfg.step_ratio,
         )
         array_shape = fault_maps[0].shape
+        config_key = dict(
+            rates=[float(r) for r in rates],
+            constraint=float(cfg.constraint),
+            repeats=int(cfg.repeats),
+            max_steps=int(cfg.max_steps),
+            seed=int(cfg.seed),
+            array_shape=[int(s) for s in array_shape],
+        )
+        if cache_path is not None and os.path.exists(cache_path):
+            try:
+                with open(cache_path) as f:
+                    cached = ResilienceTable.from_json(f.read())
+            except (ValueError, KeyError, OSError):
+                cached = None  # corrupt/truncated cache -> re-measure
+            if cached is not None and cached.meta.get("config") == config_key:
+                if progress:
+                    progress(f"resilience table loaded from {cache_path}")
+                self.table = cached
+                return cached
         self.table = measure_resilience(
             self.trainer,
             rates,
@@ -127,6 +175,13 @@ class EFAT:
             seed=cfg.seed,
             progress=progress,
         )
+        self.table.meta["config"] = config_key
+        if cache_path is not None:
+            # atomic replace: a killed run must not leave half a JSON doc
+            tmp = cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(self.table.to_json())
+            os.replace(tmp, cache_path)
         return self.table
 
     # -- Steps 2+3 ---------------------------------------------------------
@@ -149,20 +204,40 @@ class EFAT:
         progress: Optional[Callable[[str], None]] = None,
     ) -> EFATResult:
         """Run consolidated FAT per job; evaluate each chip with its own map
-        applied on top of the shipped (FAP-masked) weights."""
+        applied on top of the shipped (FAP-masked) weights.
+
+        With a batch-capable trainer every retraining job of the plan is
+        trained as ONE population and all per-chip deployments are
+        evaluated as one vmapped batch; otherwise the serial per-job loop
+        runs (same math — the population engine is proven equivalent)."""
         t0 = time.time()
         chip_metrics: dict[int, float] = {}
-        for g, (fm, chips, steps) in enumerate(
-            zip(plan.fault_maps, plan.links, plan.steps)
-        ):
-            params = self.trainer.train(fm, int(round(steps)))
-            for chip in chips:
-                chip_metrics[chip] = float(
-                    self.trainer.evaluate(params, fault_maps[chip])
-                )
-            if progress:
+        job_steps = [int(round(s)) for s in plan.steps]
+        if hasattr(self.trainer, "train_batch") and hasattr(self.trainer, "evaluate_batch"):
+            job_params = self.trainer.train_batch(plan.fault_maps, job_steps)
+            pairs = [
+                (g, chip) for g, chips in enumerate(plan.links) for chip in chips
+            ]
+            metrics = self.trainer.evaluate_batch(
+                [job_params[g] for g, _ in pairs],
+                [fault_maps[chip] for _, chip in pairs],
+            )
+            for (_, chip), m in zip(pairs, metrics):
+                chip_metrics[chip] = float(m)
+        else:
+            for g, (fm, chips, steps) in enumerate(
+                zip(plan.fault_maps, plan.links, job_steps)
+            ):
+                params = self.trainer.train(fm, steps)
+                for chip in chips:
+                    chip_metrics[chip] = float(
+                        self.trainer.evaluate(params, fault_maps[chip])
+                    )
+        if progress:
+            for g, chips in enumerate(plan.links):
                 progress(
-                    f"job {g + 1}/{plan.num_jobs}: chips={chips} steps={steps:.0f} "
+                    f"job {g + 1}/{plan.num_jobs}: chips={chips} "
+                    f"steps={plan.steps[g]:.0f} "
                     f"metrics={[f'{chip_metrics[c]:.3f}' for c in chips]}"
                 )
         return EFATResult(

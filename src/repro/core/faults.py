@@ -10,6 +10,7 @@ artifacts fed to JAX programs as small constants.
 from __future__ import annotations
 
 import json
+import os
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence
 
@@ -70,12 +71,20 @@ class FaultMap:
         return self.merge(other)
 
     # --- serialization -------------------------------------------------
-    def save(self, path: str) -> None:
-        np.savez_compressed(path, faulty=self.faulty, chip_id=self.chip_id)
+    # np.savez_compressed appends '.npz' to suffix-less paths, so save and
+    # load both normalize the suffix — load(p) always reads what save(p)
+    # wrote, whichever spelling the caller used.
+    @staticmethod
+    def _npz_path(path) -> str:
+        path = os.fspath(path)
+        return path if path.endswith(".npz") else path + ".npz"
+
+    def save(self, path) -> None:
+        np.savez_compressed(self._npz_path(path), faulty=self.faulty, chip_id=self.chip_id)
 
     @staticmethod
-    def load(path: str) -> "FaultMap":
-        z = np.load(path, allow_pickle=False)
+    def load(path) -> "FaultMap":
+        z = np.load(FaultMap._npz_path(path), allow_pickle=False)
         return FaultMap(z["faulty"], chip_id=str(z["chip_id"]))
 
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,15 +28,29 @@ import numpy as np
 from repro.core.faults import FaultMap
 from repro.core.mapping import masked_weight
 
-__all__ = ["FaultContext", "fault_linear", "fault_einsum", "healthy", "from_fault_map"]
+__all__ = [
+    "FaultContext",
+    "fault_linear",
+    "fault_einsum",
+    "healthy",
+    "from_fault_map",
+    "stack_contexts",
+]
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class FaultContext:
-    """Carries the chip's healthy mask (1=healthy PE, 0=faulty) + mode."""
+    """Carries the chip's healthy mask (1=healthy PE, 0=faulty) + mode.
 
-    ok: Optional[jax.Array]  # (R, C) float mask or None
+    ``ok`` is normally the single chip's (R, C) mask. A *batched* context
+    (built with :func:`stack_contexts`) carries an (N, R, C) stack of N
+    chips' masks behind the same static ``mode``; it flows through jit
+    boundaries like any pytree but must be consumed under ``jax.vmap`` so
+    each traced member sees an ordinary (R, C) mask.
+    """
+
+    ok: Optional[jax.Array]  # (R, C) float mask, (N, R, C) stack, or None
     mode: str = "none"  # none | fap | pallas
 
     def tree_flatten(self):
@@ -50,6 +64,13 @@ class FaultContext:
     def active(self) -> bool:
         return self.mode != "none" and self.ok is not None
 
+    @property
+    def population(self) -> Optional[int]:
+        """Number of stacked members, or None for a per-chip context."""
+        if self.ok is None or self.ok.ndim == 2:
+            return None
+        return int(self.ok.shape[0])
+
 
 def healthy() -> FaultContext:
     return FaultContext(ok=None, mode="none")
@@ -61,6 +82,41 @@ def from_fault_map(
     if fm is None:
         return healthy()
     return FaultContext(ok=jnp.asarray(fm.ok_mask, dtype=dtype), mode=mode)
+
+
+def stack_contexts(ctxs: Sequence[FaultContext]) -> FaultContext:
+    """Stack N per-chip contexts into one batched context.
+
+    The result carries a leading population axis on ``ok`` and the members'
+    shared static mode. Healthy members are upcast to an all-ones mask (FAP
+    with no faulty PE is exactly the healthy matmul), so a population can mix
+    healthy and faulty chips; an all-healthy stack collapses to ``healthy()``.
+    """
+    if not ctxs:
+        raise ValueError("no contexts to stack")
+    active = [c for c in ctxs if c.active]
+    if not active:
+        return healthy()
+    modes = {c.mode for c in active}
+    if len(modes) != 1:
+        raise ValueError(f"cannot stack contexts with mixed modes {sorted(modes)}")
+    if any(c.ok.ndim != 2 for c in active):
+        raise ValueError("stack_contexts takes per-chip (R, C) contexts, not batched ones")
+    shapes = {tuple(c.ok.shape) for c in active}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack contexts with mixed mask shapes {sorted(shapes)}")
+    shape, dtype = shapes.pop(), active[0].ok.dtype
+    oks = [c.ok if c.active else jnp.ones(shape, dtype) for c in ctxs]
+    return FaultContext(ok=jnp.stack(oks), mode=modes.pop())
+
+
+def _require_per_chip(ctx: FaultContext) -> None:
+    if ctx.population is not None:
+        raise ValueError(
+            "batched FaultContext reached a masked GEMM; consume it under "
+            "jax.vmap (e.g. via PopulationFATEngine) so each member sees an "
+            "(R, C) mask"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -84,6 +140,7 @@ def fault_linear(
     w = w.astype(x.dtype)
     if ctx is None or not ctx.active:
         return jnp.matmul(x, w, precision=precision)
+    _require_per_chip(ctx)
     if ctx.mode == "pallas" and jax.default_backend() == "tpu":
         from repro.kernels.masked_matmul import ops as mm_ops
 
@@ -105,6 +162,7 @@ def fault_einsum(
     w = w.astype(x.dtype)
     if ctx is None or not ctx.active:
         return jnp.einsum(spec, x, w, precision=precision)
+    _require_per_chip(ctx)
     return jnp.einsum(spec, x, masked_weight(w, ctx.ok), precision=precision)
 
 
@@ -138,6 +196,7 @@ def mask_selected_params(params: Any, ctx: FaultContext) -> Any:
     """
     if not ctx.active:
         return params
+    _require_per_chip(ctx)
 
     def f(path, leaf):
         keys = {getattr(k, "key", None) for k in path}
@@ -156,6 +215,7 @@ def mask_params(params: Any, ctx: FaultContext, is_mapped=None) -> Any:
     """
     if not ctx.active:
         return params
+    _require_per_chip(ctx)
 
     def default_is_mapped(path, leaf):
         return hasattr(leaf, "ndim") and leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating)

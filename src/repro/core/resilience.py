@@ -24,6 +24,7 @@ from repro.core.faults import FaultMap, random_fault_map
 __all__ = [
     "fault_rate_list",
     "FATTrainer",
+    "BatchFATTrainer",
     "ResilienceTable",
     "ResilienceTable2D",
     "measure_resilience",
@@ -74,6 +75,16 @@ class FATTrainer(Protocol):
         """FAT with this map until eval metric >= constraint; return steps
         used, or None if not reached within max_steps."""
         ...
+
+
+class BatchFATTrainer(FATTrainer, Protocol):
+    """A trainer that can probe a whole population of fault maps at once
+    (repro.train.population). Step 1 submits the full rates x repeats grid
+    through this method when available."""
+
+    def steps_to_constraint_batch(
+        self, fault_maps: Sequence[FaultMap], constraint: float, max_steps: int
+    ) -> list[Optional[int]]: ...
 
 
 # ---------------------------------------------------------------------------
@@ -218,18 +229,45 @@ def measure_resilience(
     seed: int = 0,
     fault_gen=random_fault_map,
     progress: Optional[Callable[[str], None]] = None,
+    engine: Optional[str] = None,
 ) -> ResilienceTable:
     """Run FAT experiments at each rate x repeat, recording steps-to-
     constraint (paper: 'each data point ... averaged over multiple
-    iterations to cope with the variations in fault patterns')."""
+    iterations to cope with the variations in fault patterns').
+
+    The fault-map grid is generated up front (rate-major, identical rng
+    stream to the historical serial loop) and, when the trainer implements
+    the batch protocol, each rate's repeats are submitted as one population
+    via ``steps_to_constraint_batch`` — one compiled dispatch per rate
+    instead of repeats Python loops, with populations aligned to a rate so
+    the early-exit loop wastes little straggler work, and progress reported
+    live per rate. ``engine`` forces the submission path: "population"
+    requires the batch protocol, "serial" forces the per-map reference
+    loop, None (auto) prefers batch when available. Which math runs under
+    either submission is the *trainer's* engine choice; this flag only
+    controls batching.
+    """
     rng = np.random.default_rng(seed)
+    grid: list[tuple[float, list[FaultMap]]] = [
+        (
+            rate,
+            [fault_gen(rng, array_shape[0], array_shape[1], rate) for _ in range(repeats)],
+        )
+        for rate in rates
+    ]
+    batch_capable = hasattr(trainer, "steps_to_constraint_batch")
+    if engine == "population" and not batch_capable:
+        raise ValueError("engine='population' needs a trainer with steps_to_constraint_batch")
+    use_batch = batch_capable and engine != "serial"
     mins, means, maxs = [], [], []
     kept_rates = []
-    for rate in rates:
+    for rate, fms in grid:
+        if use_batch:
+            steps_list = trainer.steps_to_constraint_batch(fms, constraint, max_steps)
+        else:
+            steps_list = [trainer.steps_to_constraint(fm, constraint, max_steps) for fm in fms]
         samples = []
-        for rep in range(repeats):
-            fm = fault_gen(rng, array_shape[0], array_shape[1], rate)
-            steps = trainer.steps_to_constraint(fm, constraint, max_steps)
+        for rep, steps in enumerate(steps_list):
             samples.append(max_steps if steps is None else steps)
             if progress:
                 progress(f"rate={rate:.4f} rep={rep} steps={samples[-1]}")

@@ -3,6 +3,14 @@
 The engine runs a static-batch generate loop (prefill once, decode N) with
 the chip's FaultContext applied — i.e. serving a fault-aware model ON the
 faulty chip it was tuned for. Greedy or temperature sampling.
+
+Sampling and decode are fused into ONE jitted step: log_softmax, the
+greedy/categorical choice, the chosen-token logprob gather and the next
+decode_step all run in a single dispatch per token, instead of a host
+round-trip for each of them. Temperature is a traced scalar (one compile
+covers greedy and every temperature); greedy token choice is exactly
+``argmax`` — independent of the sampling key — so temperature=0.0
+reproduces the unfused reference token-for-token.
 """
 from __future__ import annotations
 
@@ -36,6 +44,20 @@ class ServeEngine:
             lambda p, t, c, ctx: M.decode_step(p, t, c, cfg, ctx)
         )
 
+        def sample_decode(p, cur, cache, key, ctx, temperature):
+            lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
+            key, sub = jax.random.split(key)
+            # temperature is traced: guard the division so the (unused)
+            # sampled branch stays finite when temperature == 0
+            safe_t = jnp.maximum(temperature, 1e-6)
+            sampled = jax.random.categorical(sub, lp / safe_t, axis=-1)
+            nxt = jnp.where(temperature > 0, sampled, jnp.argmax(lp, axis=-1))
+            tok_lp = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+            step_logits, cache = M.decode_step(p, nxt[:, None], cache, cfg, ctx)
+            return nxt, tok_lp, step_logits[:, 0], cache, key
+
+        self._sample_decode = jax.jit(sample_decode)
+
     def generate(
         self,
         prompts: jax.Array,  # (B, S) token ids
@@ -49,17 +71,13 @@ class ServeEngine:
         lps = []
         cur = logits
         key = key if key is not None else jax.random.PRNGKey(0)
-        for i in range(max_new_tokens):
-            lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, lp / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(lp, axis=-1)
-            lps.append(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0])
+        temp = jnp.float32(temperature)
+        for _ in range(max_new_tokens):
+            nxt, tok_lp, cur, cache, key = self._sample_decode(
+                self.params, cur, cache, key, self.ctx, temp
+            )
+            lps.append(tok_lp)
             toks.append(nxt[:, None])
-            step_logits, cache = self._decode(self.params, nxt[:, None], cache, self.ctx)
-            cur = step_logits[:, 0]
         return GenerateResult(
             tokens=jnp.concatenate(toks, axis=1), logprobs=jnp.stack(lps, axis=1)
         )

@@ -9,26 +9,89 @@ sweep (rates x repeats) runs in minutes like the paper's CIFAR runs.
 ``LMFATTrainer`` — the same protocol over a (reduced) LM arch with the
 TokenStream data pipeline; used by the examples and integration tests to
 show FAT on the assigned transformer families.
+
+Both trainers delegate every training loop to a FAT *engine*
+(repro.train.population): ``engine="population"`` (default) trains a whole
+batch of fault maps as one vmap+scan program; ``engine="serial"`` is the
+one-map-at-a-time reference the population path is proven equivalent to.
+On top of the single-map ``FATTrainerFull`` protocol they expose the batch
+protocol (``steps_to_constraint_batch`` / ``train_batch`` /
+``evaluate_batch``) that the Step-1 sweep and Step-4 plan execution use to
+submit entire populations.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.faults import FaultMap
 from repro.core.masking import from_fault_map, healthy, mask_params
-from repro.data.synthetic import ClusterData, TokenStream, make_classification_task
+from repro.data.synthetic import TokenStream, make_classification_task
 from repro.models import model as M
-from repro.models.classifier import classifier_forward, classifier_loss, init_classifier
-from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.models.classifier import classifier_loss, init_classifier
+from repro.train.optimizer import AdamWConfig
+from repro.train.population import make_fat_engine
 
 
-class ClassifierFATTrainer:
+class _EngineBackedTrainer:
+    """Shared protocol plumbing: single-map methods are the batch methods
+    with a population of one; the engine decides how batches execute."""
+
+    # subclasses set: engine (FAT engine), base_params, and the batch fns
+    #   _probe_batch_fn  — steps_to_constraint stream (batch_fn(1..max))
+    #   _train_batch_fn  — consolidated-FAT stream (batch_fn(0..steps-1))
+
+    def evaluate_params(self, params, ctx) -> float:
+        return self.engine.evaluate_one(params, ctx)
+
+    @property
+    def grad_fn(self):
+        """Jitted ``(params, batch, ctx) -> ((loss, metrics), grads)`` over
+        this trainer's objective — for custom loops (e.g. the dual-fault
+        projected-FAT sweep) that step outside the engine."""
+        fn = getattr(self, "_grad_fn_cache", None)
+        if fn is None:
+            fn = jax.jit(jax.value_and_grad(self.engine.loss_fn, has_aux=True))
+            self._grad_fn_cache = fn
+        return fn
+
+    # ---- FATTrainerFull protocol (single map + batched) -----------------
+    def steps_to_constraint(
+        self, fault_map: FaultMap, constraint: float, max_steps: int
+    ) -> Optional[int]:
+        return self.steps_to_constraint_batch([fault_map], constraint, max_steps)[0]
+
+    def steps_to_constraint_batch(
+        self, fault_maps: Sequence[FaultMap], constraint: float, max_steps: int
+    ) -> list[Optional[int]]:
+        ctxs = [from_fault_map(fm) for fm in fault_maps]
+        return self.engine.steps_to_constraint_batch(
+            self.base_params, ctxs, constraint, max_steps, self._probe_batch_fn
+        )
+
+    def train(self, fault_map: FaultMap, steps: int):
+        return self.train_batch([fault_map], [steps])[0]
+
+    def train_batch(self, fault_maps: Sequence[FaultMap], steps: Sequence[int]) -> list:
+        ctxs = [from_fault_map(fm) for fm in fault_maps]
+        trained = self.engine.fit_batch(
+            self.base_params, ctxs, [int(s) for s in steps], self._train_batch_fn
+        )
+        # ship FAP'd weights: weights on faulty PEs are zero in the artifact
+        return [mask_params(p, ctx) for p, ctx in zip(trained, ctxs)]
+
+    def evaluate(self, params, fault_map: FaultMap) -> float:
+        return self.evaluate_batch([params], [fault_map])[0]
+
+    def evaluate_batch(
+        self, params_list: Sequence[Any], fault_maps: Sequence[FaultMap]
+    ) -> list[float]:
+        ctxs = [from_fault_map(fm) for fm in fault_maps]
+        return self.engine.evaluate_batch(list(params_list), ctxs)
+
+
+class ClassifierFATTrainer(_EngineBackedTrainer):
     """Paper SIV setup: pre-trained classifier + FAT per fault map."""
 
     def __init__(
@@ -41,6 +104,8 @@ class ClassifierFATTrainer:
         pretrain_steps: int = 400,
         eval_every: int = 5,
         eval_batches: int = 2,
+        engine: str = "population",
+        population_size: int = 16,
     ):
         self.cfg = cfg
         self.data = make_classification_task(cfg, seed=seed)
@@ -48,55 +113,39 @@ class ClassifierFATTrainer:
         self.eval_every = eval_every
         self.opt_cfg = AdamWConfig(learning_rate=lr, weight_decay=0.0, grad_clip_norm=1.0)
         self._evals = self.data.eval_batches(n=eval_batches)
+
+        # stable batch fns (one compiled program per stream); salts match
+        # the historical serial trainer so trajectories are reproducible
+        def probe_batch(s):
+            return self.data.batch_at(s, batch_size)
+
+        def fat_batch(s):
+            return self.data.batch_at(s + 1_000_003, batch_size)
+
+        self._probe_batch_fn = probe_batch
+        self._pretrain_batch_fn = probe_batch  # pretrain salt is 0
+        self._train_batch_fn = fat_batch
+
+        self.engine = make_fat_engine(
+            engine,
+            loss_fn=lambda p, b, ctx: classifier_loss(p, b, cfg, ctx),
+            opt_cfg=self.opt_cfg,
+            eval_batches=self._evals,
+            metric="accuracy",
+            higher_is_better=True,
+            eval_every=eval_every,
+            population_size=population_size,
+        )
         key = jax.random.PRNGKey(seed)
         self.base_params = init_classifier(cfg, key, in_dim=self.data.dim)
-        self._grad = jax.jit(jax.value_and_grad(
-            lambda p, b, ctx: classifier_loss(p, b, cfg, ctx), has_aux=True
-        ))
-        self._eval = jax.jit(lambda p, b, ctx: classifier_loss(p, b, cfg, ctx)[1])
         # pre-train the healthy model (the user-provided pre-trained DNN)
-        self.base_params = self._fit(self.base_params, healthy(), pretrain_steps, data_salt=0)
+        self.base_params = self.engine.fit_batch(
+            self.base_params, [healthy()], [pretrain_steps], self._pretrain_batch_fn
+        )[0]
         self.baseline_accuracy = self.evaluate_params(self.base_params, healthy())
 
-    # ------------------------------------------------------------------
-    def _fit(self, params, ctx, steps: int, data_salt: int = 1):
-        opt = adamw_init(params, self.opt_cfg)
-        for s in range(steps):
-            batch = self.data.batch_at(s + 1_000_003 * data_salt, self.batch_size)
-            (_, _m), g = self._grad(params, batch, ctx)
-            params, opt, _ = adamw_update(g, opt, params, self.opt_cfg)
-        return params
 
-    def evaluate_params(self, params, ctx) -> float:
-        accs = [float(self._eval(params, b, ctx)["accuracy"]) for b in self._evals]
-        return float(np.mean(accs))
-
-    # ---- FATTrainerFull protocol ---------------------------------------
-    def steps_to_constraint(self, fault_map: FaultMap, constraint: float, max_steps: int) -> Optional[int]:
-        ctx = from_fault_map(fault_map)
-        if self.evaluate_params(self.base_params, ctx) >= constraint:
-            return 0  # paper Fig. 3: relaxed constraints may need no retraining
-        params = self.base_params
-        opt = adamw_init(params, self.opt_cfg)
-        for s in range(1, max_steps + 1):
-            batch = self.data.batch_at(s, self.batch_size)
-            (_, _m), g = self._grad(params, batch, ctx)
-            params, opt, _ = adamw_update(g, opt, params, self.opt_cfg)
-            if s % self.eval_every == 0 and self.evaluate_params(params, ctx) >= constraint:
-                return s
-        return None
-
-    def train(self, fault_map: FaultMap, steps: int):
-        ctx = from_fault_map(fault_map)
-        params = self._fit(self.base_params, ctx, steps)
-        # ship FAP'd weights: weights on faulty PEs are zero in the artifact
-        return mask_params(params, ctx)
-
-    def evaluate(self, params, fault_map: FaultMap) -> float:
-        return self.evaluate_params(params, from_fault_map(fault_map))
-
-
-class LMFATTrainer:
+class LMFATTrainer(_EngineBackedTrainer):
     """Same protocol over a language model (reduced arch for CPU tests)."""
 
     def __init__(
@@ -111,52 +160,42 @@ class LMFATTrainer:
         eval_every: int = 10,
         eval_batches: int = 2,
         metric: str = "accuracy",
+        engine: str = "population",
+        population_size: int = 4,
     ):
         self.cfg = cfg
         self.metric = metric
         self.stream = TokenStream(cfg.vocab_size, seq_len, batch_size, seed=seed)
         self.eval_every = eval_every
         self.opt_cfg = AdamWConfig(learning_rate=lr, weight_decay=0.0)
+
+        def probe_batch(s):
+            return self.stream.batch_at(s)
+
+        def fat_batch(s):
+            return self.stream.batch_at(s + 999_983)
+
+        def pretrain_batch(s):
+            return self.stream.batch_at(s + 999_983 * 7)
+
+        self._probe_batch_fn = probe_batch
+        self._train_batch_fn = fat_batch
+        self._pretrain_batch_fn = pretrain_batch
+
         key = jax.random.PRNGKey(seed)
         self.base_params, self.specs = M.init_params(cfg, key)
         self._evals = [self.stream.batch_at(10_000_000 + i) for i in range(eval_batches)]
-        self._grad = jax.jit(jax.value_and_grad(
-            lambda p, b, ctx: M.loss_fn(p, b, cfg, ctx, remat="none"), has_aux=True
-        ))
-        self._eval = jax.jit(lambda p, b, ctx: M.loss_fn(p, b, cfg, ctx, remat="none")[1])
-        self.base_params = self._fit(self.base_params, healthy(), pretrain_steps, salt=7)
+        self.engine = make_fat_engine(
+            engine,
+            loss_fn=lambda p, b, ctx: M.loss_fn(p, b, cfg, ctx, remat="none"),
+            opt_cfg=self.opt_cfg,
+            eval_batches=self._evals,
+            metric=metric,
+            higher_is_better=metric != "loss",  # higher-is-better protocol
+            eval_every=eval_every,
+            population_size=population_size,
+        )
+        self.base_params = self.engine.fit_batch(
+            self.base_params, [healthy()], [pretrain_steps], self._pretrain_batch_fn
+        )[0]
         self.baseline_metric = self.evaluate_params(self.base_params, healthy())
-
-    def _fit(self, params, ctx, steps: int, salt: int = 1):
-        opt = adamw_init(params, self.opt_cfg)
-        for s in range(steps):
-            batch = self.stream.batch_at(s + 999_983 * salt)
-            (_, _m), g = self._grad(params, batch, ctx)
-            params, opt, _ = adamw_update(g, opt, params, self.opt_cfg)
-        return params
-
-    def evaluate_params(self, params, ctx) -> float:
-        vals = [float(self._eval(params, b, ctx)[self.metric]) for b in self._evals]
-        v = float(np.mean(vals))
-        return v if self.metric != "loss" else -v  # higher-is-better protocol
-
-    def steps_to_constraint(self, fault_map, constraint, max_steps) -> Optional[int]:
-        ctx = from_fault_map(fault_map)
-        if self.evaluate_params(self.base_params, ctx) >= constraint:
-            return 0
-        params = self.base_params
-        opt = adamw_init(params, self.opt_cfg)
-        for s in range(1, max_steps + 1):
-            (_, _m), g = self._grad(params, self.stream.batch_at(s), ctx)
-            params, opt, _ = adamw_update(g, opt, params, self.opt_cfg)
-            if s % self.eval_every == 0 and self.evaluate_params(params, ctx) >= constraint:
-                return s
-        return None
-
-    def train(self, fault_map, steps: int):
-        ctx = from_fault_map(fault_map)
-        params = self._fit(self.base_params, ctx, steps)
-        return mask_params(params, ctx)
-
-    def evaluate(self, params, fault_map) -> float:
-        return self.evaluate_params(params, from_fault_map(fault_map))

@@ -94,6 +94,21 @@ def test_clustered_map_rate():
     assert fm.fault_rate == pytest.approx(0.08, abs=0.002)
 
 
+def test_fault_map_save_load_roundtrip(tmp_path):
+    """np.savez_compressed appends '.npz'; load must find what save wrote
+    whether the caller spelled the suffix or not."""
+    fm = random_fault_map(7, 16, 16, 0.2, chip_id="chipA")
+    for name in ("bare", "with_suffix.npz"):
+        path = str(tmp_path / name)
+        fm.save(path)
+        loaded = FaultMap.load(path)  # original spelling
+        assert np.array_equal(loaded.faulty, fm.faulty)
+        assert loaded.chip_id == "chipA"
+    # the artifact on disk is the normalized .npz path
+    assert (tmp_path / "bare.npz").exists()
+    assert (tmp_path / "with_suffix.npz").exists()
+
+
 # ---------------------------------------------------------------------------
 # Systolic mapping
 # ---------------------------------------------------------------------------

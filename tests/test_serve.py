@@ -48,6 +48,34 @@ def test_engine_fault_context_changes_output():
     assert not np.array_equal(np.asarray(healthy_out.tokens), np.asarray(faulty_out.tokens))
 
 
+def test_engine_fused_greedy_matches_unfused_reference():
+    """The fused sample+decode step (one dispatch per token) must reproduce
+    the unfused host-side log_softmax/argmax loop token-for-token."""
+    cfg = reduce_config(get_arch("smollm-135m"))
+    params, _ = M.init_params(cfg, KEY)
+    eng = ServeEngine(cfg, params, max_len=48)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    fused = eng.generate(prompts, max_new_tokens=8)
+
+    # unfused reference: separate dispatches for log_softmax/argmax/decode
+    logits, cache = eng._prefill(params, {"tokens": prompts}, eng.ctx)
+    cur, toks, lps = logits, [prompts], []
+    for _ in range(8):
+        lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
+        nxt = jnp.argmax(lp, axis=-1)
+        lps.append(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0])
+        toks.append(nxt[:, None])
+        step_logits, cache = eng._decode(params, nxt[:, None], cache, eng.ctx)
+        cur = step_logits[:, 0]
+    ref_tokens = jnp.concatenate(toks, axis=1)
+    ref_lps = jnp.stack(lps, axis=1)
+
+    assert np.array_equal(np.asarray(fused.tokens), np.asarray(ref_tokens))
+    np.testing.assert_allclose(
+        np.asarray(fused.logprobs), np.asarray(ref_lps), rtol=1e-5, atol=1e-5
+    )
+
+
 def test_engine_temperature_sampling_varies_with_key():
     cfg = reduce_config(get_arch("smollm-135m"))
     params, _ = M.init_params(cfg, KEY)
