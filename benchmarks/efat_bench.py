@@ -1,35 +1,44 @@
-"""Step-1 wall-clock harness: serial reference vs population FAT engine.
+"""Step-1 wall-clock harness: serial reference vs population FAT engine,
+plus the fleet-scale ``--sharded`` mode.
 
-Runs the same resilience sweep (rates x repeats, identical fault-map grid
-and identical base params) through both engines and reports wall-clock,
-verifying on the way that the two engines produce the SAME resilience
-table — the speedup is only real if the math is unchanged.
+Default mode runs the same resilience sweep (rates x repeats, identical
+fault-map grid and identical base params) through the serial and population
+engines and reports wall-clock, verifying on the way that the two engines
+produce the SAME resilience table — the speedup is only real if the math is
+unchanged.
+
+``--sharded`` exercises the repro.fleet subsystem instead: the sweep runs
+through ``ShardedPopulationEngine`` on growing "pop" meshes (1, 2, 4, ...
+devices — forced host CPU devices unless XLA_FLAGS is already set), so the
+JSON reports per-device scaling, re-verifies shard_map↔vmap table equality,
+and prints the FleetScheduler's ``wasted_steps`` reduction (LPT vs arrival
+order) on a deliberately skewed retraining plan — the run fails unless LPT
+strictly reduces waste.
 
 Companion to benchmarks/kernel_bench.py: where that file guards the Pallas
-kernel layer row by row, this one guards the population training path. The
-output is JSON (one document with per-engine rows + the speedup) so CI can
-parse it; ``--smoke`` shrinks the sweep to CI scale and only checks
-equivalence, the full run is the perf claim (>= 3x on CPU at repeats >= 4).
+kernel layer row by row, this one guards the population/fleet training path.
+The output is JSON so CI can parse it; ``--smoke`` shrinks the sweep to CI
+scale and only checks equivalence, the full run is the perf claim (>= 3x on
+CPU at repeats >= 4).
 
 Usage:
-    PYTHONPATH=src python benchmarks/efat_bench.py [--smoke] [--out FILE]
+    PYTHONPATH=src python benchmarks/efat_bench.py [--smoke] [--sharded]
+        [--devices N] [--out FILE]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
-import numpy as np
 
-from repro.configs import get_arch
-from repro.core import fault_rate_list
-from repro.core.resilience import measure_resilience
-from repro.train.fat_trainer import ClassifierFATTrainer
+def _sweep_config(smoke: bool):
+    import numpy as np  # noqa: F401  (kept local: all heavy imports are lazy)
 
+    from repro.core import fault_rate_list
 
-def run_bench(smoke: bool) -> dict:
     if smoke:
         sweep = dict(repeats=2, max_steps=80, seed=3)
         rates = fault_rate_list([0.05], max_fr=0.12, max_interval=0.04, step=0.8)
@@ -40,7 +49,26 @@ def run_bench(smoke: bool) -> dict:
         sweep = dict(repeats=4, max_steps=400, seed=3)
         rates = fault_rate_list([0.04], max_fr=0.3, max_interval=0.05, step=0.5)
         pretrain = 300
+    return sweep, rates, pretrain
 
+
+def _tables_equal(a, b) -> bool:
+    import numpy as np
+
+    return bool(
+        np.array_equal(a.rates, b.rates)
+        and np.array_equal(a.min_steps, b.min_steps)
+        and np.array_equal(a.mean_steps, b.mean_steps)
+        and np.array_equal(a.max_steps_stat, b.max_steps_stat)
+    )
+
+
+def run_bench(smoke: bool) -> dict:
+    from repro.configs import get_arch
+    from repro.core.resilience import measure_resilience
+    from repro.train.fat_trainer import ClassifierFATTrainer
+
+    sweep, rates, pretrain = _sweep_config(smoke)
     cfg = get_arch("paper-mlp")
     pop_tr = ClassifierFATTrainer(cfg, pretrain_steps=pretrain, eval_batches=2, population_size=32)
     ser_tr = ClassifierFATTrainer(cfg, pretrain_steps=0, eval_batches=2, engine="serial")
@@ -58,12 +86,7 @@ def run_bench(smoke: bool) -> dict:
     t_pop, table_pop = sweep_once(pop_tr, None)
     t_ser, table_ser = sweep_once(ser_tr, "serial")
 
-    tables_equal = bool(
-        np.array_equal(table_pop.rates, table_ser.rates)
-        and np.array_equal(table_pop.min_steps, table_ser.min_steps)
-        and np.array_equal(table_pop.mean_steps, table_ser.mean_steps)
-        and np.array_equal(table_pop.max_steps_stat, table_ser.max_steps_stat)
-    )
+    tables_equal = _tables_equal(table_pop, table_ser)
     speedup = t_ser / t_pop if t_pop > 0 else float("inf")
     return dict(
         mode="smoke" if smoke else "full",
@@ -81,13 +104,104 @@ def run_bench(smoke: bool) -> dict:
     )
 
 
+def _skewed_plan(max_steps: int, jobs: int = 16) -> list[int]:
+    """Interleaved long/short budgets — the regime where arrival-order
+    chunking wastes the most vectorized lanes (ROADMAP's 'very skewed
+    plans')."""
+    long, short = max_steps, max(1, max_steps // 40)
+    return [long - 3 * i if i % 2 == 0 else short + i for i in range(jobs)]
+
+
+def run_sharded_bench(smoke: bool) -> dict:
+    import jax
+
+    from repro.configs import get_arch
+    from repro.core.resilience import measure_resilience
+    from repro.fleet import FleetScheduler
+    from repro.launch.mesh import make_pop_mesh
+    from repro.train.fat_trainer import ClassifierFATTrainer
+
+    sweep, rates, pretrain = _sweep_config(smoke)
+    n_dev = len(jax.devices())
+    cfg = get_arch("paper-mlp")
+    pop_size = 8 if smoke else 32
+    vmap_tr = ClassifierFATTrainer(
+        cfg, pretrain_steps=pretrain, eval_batches=2, population_size=pop_size
+    )
+    constraint = vmap_tr.baseline_accuracy - (0.05 if smoke else 0.02)
+
+    def sweep_once(trainer):
+        t0 = time.time()
+        table = measure_resilience(
+            trainer, rates, constraint, array_shape=(32, 32), **sweep
+        )
+        return time.time() - t0, table
+
+    t_vmap, table_vmap = sweep_once(vmap_tr)
+    rows = [dict(name="efat/step1_population", seconds=round(t_vmap, 3), devices=1)]
+
+    # per-device scaling: 1, 2, 4, ... up to every visible device
+    mesh_sizes = [d for d in (1, 2, 4, 8, 16) if d <= n_dev]
+    if n_dev not in mesh_sizes:
+        mesh_sizes.append(n_dev)
+    tables_equal = True
+    for d in mesh_sizes:
+        tr = ClassifierFATTrainer(
+            cfg, pretrain_steps=0, eval_batches=2, engine="sharded",
+            population_size=pop_size, engine_kwargs=dict(mesh=make_pop_mesh(d)),
+        )
+        tr.base_params = vmap_tr.base_params
+        t_d, table_d = sweep_once(tr)
+        tables_equal = tables_equal and _tables_equal(table_vmap, table_d)
+        rows.append(
+            dict(name=f"efat/step1_sharded[pop={d}]", seconds=round(t_d, 3), devices=d)
+        )
+
+    # scheduler: wasted vectorized lane-steps, LPT vs arrival, skewed plan
+    budgets = _skewed_plan(sweep["max_steps"])
+    sched_report = FleetScheduler(pop_size, policy="lpt").report(budgets)
+    lpt_strictly_reduces = (
+        sched_report["wasted_steps"] < sched_report["arrival_wasted_steps"]
+    )
+    return dict(
+        mode="sharded-smoke" if smoke else "sharded-full",
+        devices_visible=n_dev,
+        rates=[round(float(r), 5) for r in rates],
+        repeats=sweep["repeats"],
+        max_steps=sweep["max_steps"],
+        constraint=round(float(constraint), 5),
+        rows=rows,
+        tables_equal=tables_equal,
+        max_steps_stat=[float(v) for v in table_vmap.max_steps_stat],
+        scheduler=dict(
+            plan_budgets=budgets,
+            lpt_strictly_reduces=lpt_strictly_reduces,
+            **sched_report,
+        ),
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-scale sweep; equivalence only")
+    ap.add_argument(
+        "--sharded", action="store_true",
+        help="fleet mode: shard_map per-device scaling + scheduler waste report",
+    )
+    ap.add_argument(
+        "--devices", type=int, default=8,
+        help="forced host CPU device count for --sharded (ignored if XLA_FLAGS is set)",
+    )
     ap.add_argument("--out", default=None, help="also write the JSON report to this file")
     args = ap.parse_args(argv)
 
-    report = run_bench(smoke=args.smoke)
+    if args.sharded and "XLA_FLAGS" not in os.environ:
+        # must happen before the first jax import — all repro imports are lazy
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    report = run_sharded_bench(smoke=args.smoke) if args.sharded else run_bench(smoke=args.smoke)
     doc = json.dumps(report, indent=2)
     print(doc)
     if args.out:
@@ -95,9 +209,12 @@ def main(argv=None) -> int:
             f.write(doc)
 
     if not report["tables_equal"]:
-        print("FAIL: population and serial engines disagree on the resilience table", file=sys.stderr)
+        print("FAIL: engines disagree on the resilience table", file=sys.stderr)
         return 1
-    if not args.smoke and report["speedup"] < 3.0:
+    if args.sharded and not report["scheduler"]["lpt_strictly_reduces"]:
+        print("FAIL: LPT scheduling did not strictly reduce wasted_steps", file=sys.stderr)
+        return 1
+    if not args.sharded and not args.smoke and report["speedup"] < 3.0:
         print(f"FAIL: population speedup {report['speedup']}x below the 3x target", file=sys.stderr)
         return 1
     return 0

@@ -82,6 +82,19 @@ def main():
             f"{s['mean_steps_per_chip']:11.1f} {s['satisfied_fraction']:9.0%}"
         )
 
+    # fleet scheduling (repro.fleet): how the eFAT plan's jobs were packed
+    # into population chunks, and the vectorized lane-steps LPT saved vs
+    # submitting in arrival order
+    sched = results["eFAT"].scheduling
+    if sched is not None:
+        print(
+            f"\nscheduler ({sched['policy']}, chunks of {sched['population_size']}): "
+            f"{sched['jobs']} jobs -> {sched['chunks']} chunks, "
+            f"wasted lane-steps {sched['wasted_steps']:.0f} "
+            f"(arrival order: {sched['arrival_wasted_steps']:.0f}, "
+            f"saved {sched['wasted_steps_reduction']:.0f})"
+        )
+
 
 if __name__ == "__main__":
     main()

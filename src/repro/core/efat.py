@@ -93,6 +93,10 @@ class EFATResult:
     chip_metrics: dict[int, float]  # chip index -> deployed metric
     constraint: float
     wall_seconds: float = 0.0
+    # repro.fleet.FleetScheduler.report for the executed plan's job budgets
+    # (None when the trainer has no scheduler): how the jobs were packed into
+    # population chunks and the wasted vectorized lane-steps vs arrival order
+    scheduling: Optional[dict] = None
 
     @property
     def satisfied_fraction(self) -> float:
@@ -113,6 +117,9 @@ class EFATResult:
             mean_metric=float(np.mean(list(self.chip_metrics.values()))) if self.chip_metrics else 0.0,
             wall_seconds=self.wall_seconds,
         )
+        if self.scheduling is not None:
+            s["wasted_steps"] = self.scheduling["wasted_steps"]
+            s["wasted_steps_reduction"] = self.scheduling["wasted_steps_reduction"]
         return s
 
 
@@ -207,12 +214,16 @@ class EFAT:
         applied on top of the shipped (FAP-masked) weights.
 
         With a batch-capable trainer every retraining job of the plan is
-        trained as ONE population and all per-chip deployments are
-        evaluated as one vmapped batch; otherwise the serial per-job loop
-        runs (same math — the population engine is proven equivalent)."""
+        trained as ONE population (packed into chunks by the trainer's
+        FleetScheduler — see ``result.scheduling`` for the waste accounting)
+        and all per-chip deployments are evaluated as one vmapped batch;
+        otherwise the serial per-job loop runs (same math — the population
+        engine is proven equivalent)."""
         t0 = time.time()
         chip_metrics: dict[int, float] = {}
         job_steps = [int(round(s)) for s in plan.steps]
+        scheduler = getattr(self.trainer, "scheduler", None)
+        scheduling = scheduler.report(job_steps) if scheduler is not None else None
         if hasattr(self.trainer, "train_batch") and hasattr(self.trainer, "evaluate_batch"):
             job_params = self.trainer.train_batch(plan.fault_maps, job_steps)
             pairs = [
@@ -246,6 +257,7 @@ class EFAT:
             chip_metrics=chip_metrics,
             constraint=self.config.constraint,
             wall_seconds=time.time() - t0,
+            scheduling=scheduling,
         )
 
     # -- convenience: full pipeline + baselines ------------------------------

@@ -92,8 +92,11 @@ def stack_contexts(ctxs: Sequence[FaultContext]) -> FaultContext:
     with no faulty PE is exactly the healthy matmul), so a population can mix
     healthy and faulty chips; an all-healthy stack collapses to ``healthy()``.
     """
-    if not ctxs:
-        raise ValueError("no contexts to stack")
+    if len(ctxs) == 0:
+        raise ValueError(
+            "stack_contexts: empty population — need at least one FaultContext "
+            "(a single-member sequence is fine and stacks to population=1)"
+        )
     active = [c for c in ctxs if c.active]
     if not active:
         return healthy()

@@ -237,15 +237,17 @@ def measure_resilience(
 
     The fault-map grid is generated up front (rate-major, identical rng
     stream to the historical serial loop) and, when the trainer implements
-    the batch protocol, each rate's repeats are submitted as one population
-    via ``steps_to_constraint_batch`` — one compiled dispatch per rate
-    instead of repeats Python loops, with populations aligned to a rate so
-    the early-exit loop wastes little straggler work, and progress reported
-    live per rate. ``engine`` forces the submission path: "population"
-    requires the batch protocol, "serial" forces the per-map reference
-    loop, None (auto) prefers batch when available. Which math runs under
-    either submission is the *trainer's* engine choice; this flag only
-    controls batching.
+    the batch protocol, the WHOLE rates x repeats grid is submitted as one
+    ``steps_to_constraint_batch`` call. How that population is packed into
+    chunks is the trainer's scheduler's job (repro.fleet.FleetScheduler
+    packs by fault rate, so chunk members cross at similar times and the
+    early-exit loop wastes little straggler work) — Step 1 and Step 4 share
+    that single chunking implementation instead of this function hand-sorting
+    by rate. ``engine`` forces the submission path: "population" requires
+    the batch protocol, "serial" forces the per-map reference loop, None
+    (auto) prefers batch when available. Which math runs under either
+    submission is the *trainer's* engine choice; this flag only controls
+    batching. Per-member results are identical either way.
     """
     rng = np.random.default_rng(seed)
     grid: list[tuple[float, list[FaultMap]]] = [
@@ -259,12 +261,18 @@ def measure_resilience(
     if engine == "population" and not batch_capable:
         raise ValueError("engine='population' needs a trainer with steps_to_constraint_batch")
     use_batch = batch_capable and engine != "serial"
+    if use_batch:
+        # one submission for the whole grid: progress necessarily reports
+        # after the population program returns
+        flat_maps = [fm for _rate, fms in grid for fm in fms]
+        flat_steps = trainer.steps_to_constraint_batch(flat_maps, constraint, max_steps)
     mins, means, maxs = [], [], []
     kept_rates = []
-    for rate, fms in grid:
+    for k, (rate, fms) in enumerate(grid):
         if use_batch:
-            steps_list = trainer.steps_to_constraint_batch(fms, constraint, max_steps)
+            steps_list = flat_steps[k * repeats : (k + 1) * repeats]
         else:
+            # serial reference: one map at a time, progress stays live
             steps_list = [trainer.steps_to_constraint(fm, constraint, max_steps) for fm in fms]
         samples = []
         for rep, steps in enumerate(steps_list):

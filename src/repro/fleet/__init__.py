@@ -1,0 +1,26 @@
+"""repro.fleet — fleet-scale execution layer between the FAT engines and the
+launch/serve stack.
+
+Three cooperating modules (see README.md in this directory):
+
+* :mod:`repro.fleet.sharding` — :class:`ShardedPopulationEngine`, the
+  population FAT programs under ``shard_map`` over a "pop" mesh axis (one
+  sub-population per device).
+* :mod:`repro.fleet.scheduler` — :class:`FleetScheduler`, budget-aware
+  (LPT) packing of retraining jobs into population chunks, with
+  ``wasted_steps`` accounting.
+* :mod:`repro.fleet.serve` — :class:`FleetServeEngine`, one vmapped serving
+  engine advancing N faulty chips' deployed models a token per dispatch.
+"""
+from repro.fleet.scheduler import FleetSchedule, FleetScheduler, ScheduledChunk
+from repro.fleet.serve import FleetGenerateResult, FleetServeEngine
+from repro.fleet.sharding import ShardedPopulationEngine
+
+__all__ = [
+    "FleetSchedule",
+    "FleetScheduler",
+    "ScheduledChunk",
+    "FleetGenerateResult",
+    "FleetServeEngine",
+    "ShardedPopulationEngine",
+]

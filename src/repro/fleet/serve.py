@@ -1,0 +1,115 @@
+"""Multi-chip serving — one vmapped engine serving a whole fleet's models.
+
+The deployment half of eFAT produces one fault-aware artifact per
+retraining job, each deployed on chips with their own fault maps. Evaluating
+the deployed fleet with per-chip ``ServeEngine`` instances costs N Python
+generate loops of one-dispatch-per-token each. But the engines differ only
+in (params, FaultContext) — the same population trick the training side
+uses: ``FleetServeEngine`` stacks N chips' params and masks and vmaps the
+fused sampling+decode step (``repro.serve.engine.make_sample_decode``) over
+the chip axis, so the *entire fleet* advances one token per dispatch.
+
+Semantics match per-chip serving exactly: greedy decoding is argmax per
+chip (independent of the sampling key), so temperature=0.0 reproduces each
+chip's own ``ServeEngine`` token-for-token (pinned in tests/test_fleet.py);
+with temperature > 0 each chip samples from its own key stream (the fleet
+key is split once per chip).
+
+Prompts are shared across chips — the fleet-evaluation use case is "run the
+same prompt set through every deployed model and compare".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import FaultContext, healthy, stack_contexts
+from repro.models import model as M
+from repro.serve.engine import make_sample_decode
+from repro.train.population import _stack_trees
+
+__all__ = ["FleetGenerateResult", "FleetServeEngine"]
+
+
+@dataclass
+class FleetGenerateResult:
+    tokens: jax.Array  # (N, B, prompt + generated)
+    logprobs: jax.Array  # (N, B, generated)
+
+    def chip(self, i: int):
+        """Per-chip view (tokens, logprobs) — shaped like ServeEngine output."""
+        return self.tokens[i], self.logprobs[i]
+
+
+class FleetServeEngine:
+    """Serve N chips' (params, FaultContext) pairs as one batched program.
+
+    ``params_list[i]`` are chip i's shipped (FAP-masked) weights and
+    ``ctxs[i]`` its fault context (None/healthy for a fault-free chip —
+    mixed fleets are fine; ``stack_contexts`` upcasts healthy members).
+    All chips share one model config and prompt batch.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params_list: Sequence,
+        ctxs: Optional[Sequence[Optional[FaultContext]]] = None,
+        *,
+        max_len: int = 4096,
+    ):
+        n = len(params_list)
+        if n == 0:
+            raise ValueError("FleetServeEngine needs at least one chip")
+        ctxs = list(ctxs) if ctxs is not None else [healthy()] * n
+        if len(ctxs) != n:
+            raise ValueError(f"{n} params sets but {len(ctxs)} fault contexts")
+        self.cfg = cfg
+        self.max_len = max_len
+        self.num_chips = n
+        self.params = _stack_trees(list(params_list))
+        self.ctx = stack_contexts([c or healthy() for c in ctxs])
+        # vmap axis for the context: the ok mask batches over chips when any
+        # chip is faulty; an all-healthy fleet carries no mask at all
+        ctx_ax = (
+            None
+            if self.ctx.ok is None
+            else FaultContext(ok=0, mode=self.ctx.mode)  # type: ignore[arg-type]
+        )
+        self._prefill = jax.jit(
+            jax.vmap(
+                lambda p, b, ctx: M.prefill(p, b, cfg, ctx, cache_len=max_len),
+                in_axes=(0, None, ctx_ax),
+            )
+        )
+        self._sample_decode = jax.jit(
+            jax.vmap(make_sample_decode(cfg), in_axes=(0, 0, 0, 0, ctx_ax, None))
+        )
+
+    def generate(
+        self,
+        prompts: jax.Array,  # (B, S) token ids, shared by every chip
+        *,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+    ) -> FleetGenerateResult:
+        logits, cache = self._prefill(self.params, {"tokens": prompts}, self.ctx)
+        cur = logits  # (N, B, V)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        keys = jax.random.split(key, self.num_chips)  # one sample stream per chip
+        temp = jnp.float32(temperature)
+        toks = [jnp.broadcast_to(prompts[None], (self.num_chips,) + prompts.shape)]
+        lps = []
+        for _ in range(max_new_tokens):
+            nxt, tok_lp, cur, cache, keys = self._sample_decode(
+                self.params, cur, cache, keys, self.ctx, temp
+            )
+            lps.append(tok_lp)
+            toks.append(nxt[:, :, None])
+        return FleetGenerateResult(
+            tokens=jnp.concatenate(toks, axis=2), logprobs=jnp.stack(lps, axis=2)
+        )

@@ -1,0 +1,123 @@
+"""Device-sharded population FAT — ``shard_map`` over the "pop" mesh axis.
+
+``PopulationFATEngine`` (repro.train.population) turns N fault maps into one
+vmap+scan program on a single device. This module adds the next rung of the
+ROADMAP: the same programs wrapped in ``shard_map`` over a 1-D "pop" mesh
+(``repro.launch.mesh.make_pop_mesh``), so each device (or mesh slice) runs a
+sub-population of ``fit_batch`` / ``steps_to_constraint_batch`` /
+``evaluate_batch``. Fleet-scale Step-1 sweeps and Step-4 plan execution then
+scale near-linearly with device count.
+
+Design invariants
+-----------------
+* **Identical math.** The sharded engine wraps the *same* un-jitted run
+  bodies (``_fit_run`` / ``_steps_run`` / ``_eval_run``) the vmap engine
+  jits; a member's trajectory depends only on its own (mask, budget) and the
+  shared batch stream, so serial, vmap and shard_map produce identical
+  steps-to-constraint and resilience tables (pinned in tests/test_fleet.py).
+* **Population -> device mapping.** A chunk of ``population_size`` members is
+  padded to a multiple of the mesh size and split contiguously: device d
+  takes members ``[d*k, (d+1)*k)`` of the chunk. Padding members are
+  zero-budget (fit) or duplicates (steps) and are sliced off the results —
+  they never leak out.
+* **Per-shard early exit.** ``fit_batch``'s fori_loop bound is
+  ``max(budgets)`` *of the local shard*, and ``steps_to_constraint_batch``'s
+  while_loop exits when the local sub-population has crossed — each device
+  stops as soon as its own members are done, which the single-device engine
+  cannot do. (No collectives run inside the loops, so divergent per-device
+  trip counts are legal SPMD.)
+
+CPU testing: export ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+before the first jax import (see tests/test_fleet.py and the CI fleet job).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.mesh import make_pop_mesh
+from repro.train.population import BatchFn, PopulationFATEngine
+
+__all__ = ["ShardedPopulationEngine"]
+
+
+class ShardedPopulationEngine(PopulationFATEngine):
+    """PopulationFATEngine whose compiled programs run under ``shard_map``.
+
+    Parameters (beyond the population engine's): ``mesh`` — a 1-D mesh whose
+    single axis is the population axis (default: ``make_pop_mesh()`` over
+    every visible device); ``axis_name`` — that axis' name ("pop").
+
+    ``population_size`` is rounded up to a multiple of the mesh size so every
+    chunk tiles the mesh exactly; all-healthy submissions (mode "none", e.g.
+    the pretrain call) have no mask to shard and fall back to the parent's
+    single-device program.
+    """
+
+    kind = "sharded"
+
+    def __init__(
+        self,
+        *,
+        mesh: Optional[Mesh] = None,
+        axis_name: str = "pop",
+        **kwargs,
+    ):
+        super().__init__(**kwargs)
+        self.mesh = mesh if mesh is not None else make_pop_mesh(axis=axis_name)
+        if axis_name not in self.mesh.shape:
+            raise ValueError(
+                f"mesh axes {tuple(self.mesh.shape)} lack population axis {axis_name!r}"
+            )
+        self.axis_name = axis_name
+        self.num_shards = int(self.mesh.shape[axis_name])
+        # chunks must tile the mesh: round the configured width up
+        self.population_size = max(
+            self.num_shards,
+            -(-self.population_size // self.num_shards) * self.num_shards,
+        )
+
+    # -- chunking: every chunk width is a multiple of the mesh size --------
+
+    def _chunks(self, n: int):
+        size = max(1, min(self.population_size, n))
+        size = -(-size // self.num_shards) * self.num_shards
+        for lo in range(0, n, size):
+            yield lo, min(size, n - lo), size
+
+    # -- program wrappers: jit(shard_map(run)) over the pop axis -----------
+
+    def _shard(self, run, in_specs):
+        return jax.jit(
+            shard_map(
+                run,
+                mesh=self.mesh,
+                in_specs=in_specs,
+                out_specs=P(self.axis_name),
+                check_rep=False,  # per-shard loop trip counts legitimately diverge
+            )
+        )
+
+    def _make_fit(self, batch_fn: BatchFn, mode: str):
+        run = self._fit_run(batch_fn, mode)
+        if mode == "none":  # all-healthy population: ok is None, nothing to shard
+            return jax.jit(run)
+        a = self.axis_name
+        # (params0 replicated, ok_pop sharded, budgets sharded)
+        return self._shard(run, (P(), P(a), P(a)))
+
+    def _make_steps(self, batch_fn: BatchFn, mode: str):
+        run = self._steps_run(batch_fn, mode)
+        a = self.axis_name
+        # (params0 replicated, ok_pop sharded, constraint, max_steps)
+        return self._shard(run, (P(), P(a), P(), P()))
+
+    def _make_eval(self, mode: str):
+        run = self._eval_run(mode)
+        if mode == "none":
+            return jax.jit(run)
+        a = self.axis_name
+        return self._shard(run, (P(a), P(a)))

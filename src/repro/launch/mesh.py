@@ -38,3 +38,24 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_pop_mesh(num_devices: int | None = None, axis: str = "pop"):
+    """1-D mesh over the *population* axis — one slice per device, each
+    training (or serving) a sub-population of fault maps.
+
+    This is the fleet-scale mesh (repro.fleet): orthogonal to the
+    data/model meshes above, it parallelizes over chips-being-retrained
+    rather than over one model's tensors. Defaults to every visible device;
+    CPU-testable by exporting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+    jax import (a (1,)-mesh on a single device is valid and runs the same
+    program).
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if n < 1 or n > len(devs):
+        raise ValueError(f"pop mesh needs 1..{len(devs)} devices, asked for {n}")
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))

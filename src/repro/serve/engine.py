@@ -31,6 +31,33 @@ class GenerateResult:
     logprobs: jax.Array  # (B, generated)
 
 
+def make_sample_decode(cfg):
+    """Build the fused sampling+decode step for one chip.
+
+    ``(params, cur_logits, cache, key, ctx, temperature) ->
+    (next_token, token_logprob, next_logits, cache, key)`` — log_softmax,
+    the greedy/categorical choice, the chosen-token logprob gather and the
+    next ``decode_step`` in a single traced body. ``ServeEngine`` jits it
+    directly (one dispatch per token); ``repro.fleet.serve.FleetServeEngine``
+    vmaps it over N chips' (params, FaultContext) pairs first, so a whole
+    fleet advances one token per dispatch.
+    """
+
+    def sample_decode(p, cur, cache, key, ctx, temperature):
+        lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
+        key, sub = jax.random.split(key)
+        # temperature is traced: guard the division so the (unused)
+        # sampled branch stays finite when temperature == 0
+        safe_t = jnp.maximum(temperature, 1e-6)
+        sampled = jax.random.categorical(sub, lp / safe_t, axis=-1)
+        nxt = jnp.where(temperature > 0, sampled, jnp.argmax(lp, axis=-1))
+        tok_lp = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+        step_logits, cache = M.decode_step(p, nxt[:, None], cache, cfg, ctx)
+        return nxt, tok_lp, step_logits[:, 0], cache, key
+
+    return sample_decode
+
+
 class ServeEngine:
     def __init__(self, cfg, params, ctx: Optional[FaultContext] = None, *, max_len: int = 4096):
         self.cfg = cfg
@@ -44,19 +71,7 @@ class ServeEngine:
             lambda p, t, c, ctx: M.decode_step(p, t, c, cfg, ctx)
         )
 
-        def sample_decode(p, cur, cache, key, ctx, temperature):
-            lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
-            key, sub = jax.random.split(key)
-            # temperature is traced: guard the division so the (unused)
-            # sampled branch stays finite when temperature == 0
-            safe_t = jnp.maximum(temperature, 1e-6)
-            sampled = jax.random.categorical(sub, lp / safe_t, axis=-1)
-            nxt = jnp.where(temperature > 0, sampled, jnp.argmax(lp, axis=-1))
-            tok_lp = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
-            step_logits, cache = M.decode_step(p, nxt[:, None], cache, cfg, ctx)
-            return nxt, tok_lp, step_logits[:, 0], cache, key
-
-        self._sample_decode = jax.jit(sample_decode)
+        self._sample_decode = jax.jit(make_sample_decode(cfg))
 
     def generate(
         self,

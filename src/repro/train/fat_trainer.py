@@ -28,6 +28,7 @@ import jax
 from repro.core.faults import FaultMap
 from repro.core.masking import from_fault_map, healthy, mask_params
 from repro.data.synthetic import TokenStream, make_classification_task
+from repro.fleet.scheduler import FleetScheduler
 from repro.models import model as M
 from repro.models.classifier import classifier_loss, init_classifier
 from repro.train.optimizer import AdamWConfig
@@ -36,11 +37,28 @@ from repro.train.population import make_fat_engine
 
 class _EngineBackedTrainer:
     """Shared protocol plumbing: single-map methods are the batch methods
-    with a population of one; the engine decides how batches execute."""
+    with a population of one; the engine decides how batches execute.
 
-    # subclasses set: engine (FAT engine), base_params, and the batch fns
+    Every batch submission routes through one :class:`FleetScheduler`
+    (repro.fleet): jobs are packed into population chunks by cost — the
+    prescribed step budget for ``train_batch`` (Step 4), the fault rate as
+    cost proxy for ``steps_to_constraint_batch`` (Step 1) — then results are
+    mapped back to caller order. Per-member results are chunk-invariant, so
+    scheduling changes only wall-clock/wasted lanes, never the math."""
+
+    # subclasses set: engine (FAT engine), scheduler, base_params, and the
+    # batch fns
     #   _probe_batch_fn  — steps_to_constraint stream (batch_fn(1..max))
     #   _train_batch_fn  — consolidated-FAT stream (batch_fn(0..steps-1))
+
+    def _make_scheduler(self, policy: str) -> FleetScheduler:
+        return FleetScheduler(
+            self.engine.population_size,
+            policy=policy,
+            # sharded engine chunks tile its pop mesh; waste accounting must
+            # count the same padding lanes the compiled chunk actually runs
+            width_multiple=getattr(self.engine, "num_shards", 1),
+        )
 
     def evaluate_params(self, params, ctx) -> float:
         return self.engine.evaluate_one(params, ctx)
@@ -66,18 +84,27 @@ class _EngineBackedTrainer:
         self, fault_maps: Sequence[FaultMap], constraint: float, max_steps: int
     ) -> list[Optional[int]]:
         ctxs = [from_fault_map(fm) for fm in fault_maps]
-        return self.engine.steps_to_constraint_batch(
-            self.base_params, ctxs, constraint, max_steps, self._probe_batch_fn
+        # required steps are what we're measuring — pack by fault rate, the
+        # best prior (chunks run until their slowest member crosses)
+        sched = self.scheduler.schedule([fm.fault_rate for fm in fault_maps])
+        out = self.engine.steps_to_constraint_batch(
+            self.base_params, sched.permute(ctxs), constraint, max_steps,
+            self._probe_batch_fn,
         )
+        return sched.unpermute(out)
 
     def train(self, fault_map: FaultMap, steps: int):
         return self.train_batch([fault_map], [steps])[0]
 
     def train_batch(self, fault_maps: Sequence[FaultMap], steps: Sequence[int]) -> list:
         ctxs = [from_fault_map(fm) for fm in fault_maps]
+        budgets = [int(s) for s in steps]
+        sched = self.scheduler.schedule(budgets)
         trained = self.engine.fit_batch(
-            self.base_params, ctxs, [int(s) for s in steps], self._train_batch_fn
+            self.base_params, sched.permute(ctxs), sched.permute(budgets),
+            self._train_batch_fn,
         )
+        trained = sched.unpermute(trained)
         # ship FAP'd weights: weights on faulty PEs are zero in the artifact
         return [mask_params(p, ctx) for p, ctx in zip(trained, ctxs)]
 
@@ -106,6 +133,8 @@ class ClassifierFATTrainer(_EngineBackedTrainer):
         eval_batches: int = 2,
         engine: str = "population",
         population_size: int = 16,
+        schedule: str = "lpt",
+        engine_kwargs: Optional[dict] = None,
     ):
         self.cfg = cfg
         self.data = make_classification_task(cfg, seed=seed)
@@ -135,7 +164,9 @@ class ClassifierFATTrainer(_EngineBackedTrainer):
             higher_is_better=True,
             eval_every=eval_every,
             population_size=population_size,
+            **(engine_kwargs or {}),
         )
+        self.scheduler = self._make_scheduler(schedule)
         key = jax.random.PRNGKey(seed)
         self.base_params = init_classifier(cfg, key, in_dim=self.data.dim)
         # pre-train the healthy model (the user-provided pre-trained DNN)
@@ -162,6 +193,8 @@ class LMFATTrainer(_EngineBackedTrainer):
         metric: str = "accuracy",
         engine: str = "population",
         population_size: int = 4,
+        schedule: str = "lpt",
+        engine_kwargs: Optional[dict] = None,
     ):
         self.cfg = cfg
         self.metric = metric
@@ -194,7 +227,9 @@ class LMFATTrainer(_EngineBackedTrainer):
             higher_is_better=metric != "loss",  # higher-is-better protocol
             eval_every=eval_every,
             population_size=population_size,
+            **(engine_kwargs or {}),
         )
+        self.scheduler = self._make_scheduler(schedule)
         self.base_params = self.engine.fit_batch(
             self.base_params, [healthy()], [pretrain_steps], self._pretrain_batch_fn
         )[0]

@@ -26,6 +26,11 @@ Both engines share one interface so ``ClassifierFATTrainer`` /
 here unchanged. Memory scales linearly with the population, so batched
 calls are chunked to ``population_size`` members; chunking only changes
 how work is submitted, never per-member math.
+
+A third engine, ``repro.fleet.sharding.ShardedPopulationEngine``
+(``engine="sharded"``), subclasses the population engine and wraps the same
+run bodies in ``shard_map`` over a "pop" mesh axis so each device trains a
+sub-population — see ``src/repro/fleet/README.md``.
 """
 from __future__ import annotations
 
@@ -136,16 +141,24 @@ class PopulationFATEngine:
             lambda p, ok: self._member_eval(p, ok, mode), in_axes=(0, ok_axis)
         )(params_pop, ok_pop)
 
+    def _eval_run(self, mode: str):
+        return lambda pp, ok: self._eval_pop(pp, ok, mode)
+
+    def _make_eval(self, mode: str):
+        return jax.jit(self._eval_run(mode))
+
     def _eval_program(self, mode: str):
         if mode not in self._eval_programs:
-            self._eval_programs[mode] = jax.jit(
-                lambda pp, ok: self._eval_pop(pp, ok, mode)
-            )
+            self._eval_programs[mode] = self._make_eval(mode)
         return self._eval_programs[mode]
 
     # -- compiled programs ------------------------------------------------
+    # Each program comes in two layers: ``_*_run`` builds the plain traced
+    # function over a full population chunk, and ``_make_*`` wraps it for
+    # execution (jit here; jit(shard_map(...)) in the fleet subclass, which
+    # reuses the same run bodies so per-member math cannot diverge).
 
-    def _make_fit(self, batch_fn: BatchFn, mode: str):
+    def _fit_run(self, batch_fn: BatchFn, mode: str):
         """One fori_loop trains every member to its own step budget: updates
         are computed for the whole population and select-masked off once a
         member's budget is spent — identical trajectories to training each
@@ -179,9 +192,12 @@ class PopulationFATEngine:
             )
             return params_pop
 
-        return jax.jit(run)
+        return run
 
-    def _make_steps(self, batch_fn: BatchFn, mode: str):
+    def _make_fit(self, batch_fn: BatchFn, mode: str):
+        return jax.jit(self._fit_run(batch_fn, mode))
+
+    def _steps_run(self, batch_fn: BatchFn, mode: str):
         """steps-to-constraint for the whole population as one while_loop of
         eval-period chunks. ``crossed[i]`` latches the first step at which
         member i's metric reached the constraint (sentinel max_steps+1 when
@@ -226,7 +242,10 @@ class PopulationFATEngine:
             )
             return crossed
 
-        return jax.jit(run)
+        return run
+
+    def _make_steps(self, batch_fn: BatchFn, mode: str):
+        return jax.jit(self._steps_run(batch_fn, mode))
 
     # -- chunking ---------------------------------------------------------
 
@@ -338,9 +357,9 @@ class SerialFATEngine:
         metric: str = "accuracy",
         higher_is_better: bool = True,
         eval_every: int = 5,
-        population_size: int = 16,  # accepted for interface parity; unused
+        population_size: int = 16,  # interface parity; serial chunks are 1-wide
     ):
-        del population_size
+        self.population_size = 1  # one member at a time — schedulers see no packing
         self.loss_fn = loss_fn
         self.opt_cfg = opt_cfg
         self.metric = metric
@@ -397,4 +416,11 @@ def make_fat_engine(kind: str, **kwargs):
         return PopulationFATEngine(**kwargs)
     if kind == "serial":
         return SerialFATEngine(**kwargs)
-    raise ValueError(f"unknown FAT engine {kind!r} (use 'population' or 'serial')")
+    if kind == "sharded":
+        # lazy: repro.fleet.sharding imports this module
+        from repro.fleet.sharding import ShardedPopulationEngine
+
+        return ShardedPopulationEngine(**kwargs)
+    raise ValueError(
+        f"unknown FAT engine {kind!r} (use 'population', 'serial', or 'sharded')"
+    )

@@ -69,6 +69,30 @@ def test_stack_contexts_batched_pytree_roundtrip_under_jit():
     assert np.allclose(np.asarray(rates), [fm.fault_rate for fm in maps], atol=1e-6)
 
 
+def test_stack_contexts_empty_population_raises():
+    with pytest.raises(ValueError, match="empty population"):
+        stack_contexts([])
+
+
+def test_single_member_population(trainers):
+    """A population of ONE is a legal fleet: stacks to population=1 and runs
+    through the population engine identically to the serial reference."""
+    fm = random_fault_map(5, 32, 32, 0.15)
+    stacked = stack_contexts([from_fault_map(fm)])
+    assert stacked.population == 1
+    assert stacked.ok.shape == (1, 32, 32)
+    pop, ser = trainers
+    constraint = pop.baseline_accuracy - 0.05
+    assert pop.steps_to_constraint_batch([fm], constraint, 100) == (
+        ser.steps_to_constraint_batch([fm], constraint, 100)
+    )
+    p_pop = pop.train_batch([fm], [10])[0]
+    p_ser = ser.train_batch([fm], [10])[0]
+    rtol, atol = dtype_tol(jnp.float32, atol_scale=100)
+    for x, y in zip(jax.tree_util.tree_leaves(p_pop), jax.tree_util.tree_leaves(p_ser)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+
+
 def test_stack_contexts_upcasts_healthy_and_rejects_mixed_modes():
     fm = random_fault_map(0, 8, 8, 0.25)
     stacked = stack_contexts([from_fault_map(fm), healthy()])
