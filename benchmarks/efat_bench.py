@@ -15,6 +15,16 @@ and prints the FleetScheduler's ``wasted_steps`` reduction (LPT vs arrival
 order) on a deliberately skewed retraining plan — the run fails unless LPT
 strictly reduces waste.
 
+``--mesh POPxMODEL`` (e.g. ``--mesh 4x2``) runs the 2-D fleet-mesh mode:
+the sweep runs through the sharded engine on a ``("pop", "model")`` mesh,
+re-verifies 2-D↔vmap table equality, and reports PER-MEMBER RESIDENT PARAM
+BYTES from the engine's fit output — the run fails unless each member's
+resident bytes are <= (its total param bytes / model-axis extent) within
+tolerance, i.e. unless member weights are genuinely sharded within pop
+slices instead of replicated. ``--population-size auto`` sizes the chunk
+width with ``fleet.suggest_population_size`` (per-device memory / member
+param+opt bytes).
+
 Companion to benchmarks/kernel_bench.py: where that file guards the Pallas
 kernel layer row by row, this one guards the population/fleet training path.
 The output is JSON so CI can parse it; ``--smoke`` shrinks the sweep to CI
@@ -23,7 +33,8 @@ CPU at repeats >= 4).
 
 Usage:
     PYTHONPATH=src python benchmarks/efat_bench.py [--smoke] [--sharded]
-        [--devices N] [--out FILE]
+        [--mesh POPxMODEL] [--population-size N|auto] [--devices N]
+        [--out FILE]
 """
 from __future__ import annotations
 
@@ -35,8 +46,6 @@ import time
 
 
 def _sweep_config(smoke: bool):
-    import numpy as np  # noqa: F401  (kept local: all heavy imports are lazy)
-
     from repro.core import fault_rate_list
 
     if smoke:
@@ -181,6 +190,109 @@ def run_sharded_bench(smoke: bool) -> dict:
     )
 
 
+def _parse_mesh(spec: str) -> tuple[int, int]:
+    try:
+        pop_s, model_s = spec.lower().split("x")
+        pop, model = int(pop_s), int(model_s)
+    except ValueError:
+        raise SystemExit(f"--mesh wants POPxMODEL (e.g. 4x2), got {spec!r}")
+    if pop < 1 or model < 1:
+        raise SystemExit(f"--mesh extents must be >= 1, got {spec!r}")
+    return pop, model
+
+
+def run_mesh_bench(smoke: bool, mesh_spec: str, population_size: str) -> dict:
+    """2-D fleet-mesh mode: pop x model sharded engine vs the vmap engine,
+    plus per-member resident param bytes off the fit output."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.core.resilience import measure_resilience
+    from repro.fleet import suggest_population_size
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.train.fat_trainer import ClassifierFATTrainer
+
+    sweep, rates, pretrain = _sweep_config(smoke)
+    pop_ext, model_ext = _parse_mesh(mesh_spec)
+    cfg = get_arch("paper-mlp")
+    mesh = make_fleet_mesh(pop_ext, model_ext)
+    if population_size == "auto":
+        pop_size = suggest_population_size(cfg, mesh)
+    else:
+        pop_size = int(population_size) if population_size else (8 if smoke else 32)
+
+    vmap_tr = ClassifierFATTrainer(
+        cfg, pretrain_steps=pretrain, eval_batches=2, population_size=pop_size
+    )
+    mesh_tr = ClassifierFATTrainer(
+        cfg, pretrain_steps=0, eval_batches=2, engine="sharded",
+        population_size=pop_size, engine_kwargs=dict(mesh=mesh),
+    )
+    mesh_tr.base_params = vmap_tr.base_params
+    constraint = vmap_tr.baseline_accuracy - (0.05 if smoke else 0.02)
+
+    def sweep_once(trainer):
+        t0 = time.time()
+        table = measure_resilience(
+            trainer, rates, constraint, array_shape=(32, 32), **sweep
+        )
+        return time.time() - t0, table
+
+    t_vmap, table_vmap = sweep_once(vmap_tr)
+    t_mesh, table_mesh = sweep_once(mesh_tr)
+    tables_equal = _tables_equal(table_vmap, table_mesh)
+
+    # resident-memory proof: train a plan and read the engine's accounting
+    # of the raw (still member-stacked, still device-resident) fit output
+    budgets = _skewed_plan(sweep["max_steps"], jobs=min(mesh_tr.engine.population_size, 16))
+    mesh_tr.train_batch(
+        [_bench_fault_map(i) for i in range(len(budgets))], budgets
+    )
+    stats = mesh_tr.engine.last_fit_stats or {}
+    resident = stats.get("per_member_resident_bytes", float("inf"))
+    total = stats.get("per_member_total_bytes", 0.0)
+    # replicated would be == total; sharded is total/model. 5% + 1 KiB of
+    # slack absorbs small replicated leaves (biases that don't divide etc.)
+    bound = total / model_ext * 1.05 + 1024
+    params_sharded = resident <= bound
+
+    return dict(
+        mode="mesh-smoke" if smoke else "mesh-full",
+        mesh=dict(pop=pop_ext, model=model_ext),
+        devices_visible=len(jax.devices()),
+        population_size=pop_size,
+        population_size_policy=population_size or "fixed",
+        rates=[round(float(r), 5) for r in rates],
+        repeats=sweep["repeats"],
+        max_steps=sweep["max_steps"],
+        constraint=round(float(constraint), 5),
+        rows=[
+            dict(name="efat/step1_population", seconds=round(t_vmap, 3), devices=1),
+            dict(
+                name=f"efat/step1_mesh[{pop_ext}x{model_ext}]",
+                seconds=round(t_mesh, 3), devices=pop_ext * model_ext,
+            ),
+        ],
+        tables_equal=tables_equal,
+        max_steps_stat=[float(v) for v in table_vmap.max_steps_stat],
+        memory=dict(
+            per_member_resident_bytes=resident,
+            per_member_total_bytes=total,
+            sharded_bound_bytes=round(bound, 1),
+            params_sharded_within_pop_slices=params_sharded,
+            **{k: stats[k] for k in (
+                "chunk_width", "members_per_lane", "pop_extent", "model_extent",
+            ) if k in stats},
+        ),
+    )
+
+
+def _bench_fault_map(i: int):
+    from repro.core import random_fault_map
+
+    return random_fault_map(i, 32, 32, 0.06 + 0.015 * (i % 8))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-scale sweep; equivalence only")
@@ -189,19 +301,41 @@ def main(argv=None) -> int:
         help="fleet mode: shard_map per-device scaling + scheduler waste report",
     )
     ap.add_argument(
+        "--mesh", default=None, metavar="POPxMODEL",
+        help="2-D fleet-mesh mode (e.g. 4x2): pop x model sharded engine, "
+        "table equality + per-member resident param bytes",
+    )
+    ap.add_argument(
+        "--population-size", default=None,
+        help="population chunk width for --mesh: an integer, or 'auto' to "
+        "size against per-device memory (fleet.suggest_population_size)",
+    )
+    ap.add_argument(
         "--devices", type=int, default=8,
-        help="forced host CPU device count for --sharded (ignored if XLA_FLAGS is set)",
+        help="forced host CPU device count for --sharded/--mesh "
+        "(ignored if XLA_FLAGS is set)",
     )
     ap.add_argument("--out", default=None, help="also write the JSON report to this file")
     args = ap.parse_args(argv)
 
-    if args.sharded and "XLA_FLAGS" not in os.environ:
+    if args.sharded and args.mesh:
+        ap.error("--sharded and --mesh are separate modes; pass one at a time")
+    if (args.sharded or args.mesh) and "XLA_FLAGS" not in os.environ:
         # must happen before the first jax import — all repro imports are lazy
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}"
-        )
+        need = args.devices
+        if args.mesh:
+            pop_ext, model_ext = _parse_mesh(args.mesh)
+            need = max(need, pop_ext * model_ext)
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={need}"
 
-    report = run_sharded_bench(smoke=args.smoke) if args.sharded else run_bench(smoke=args.smoke)
+    if args.mesh:
+        report = run_mesh_bench(
+            smoke=args.smoke, mesh_spec=args.mesh, population_size=args.population_size
+        )
+    elif args.sharded:
+        report = run_sharded_bench(smoke=args.smoke)
+    else:
+        report = run_bench(smoke=args.smoke)
     doc = json.dumps(report, indent=2)
     print(doc)
     if args.out:
@@ -211,10 +345,19 @@ def main(argv=None) -> int:
     if not report["tables_equal"]:
         print("FAIL: engines disagree on the resilience table", file=sys.stderr)
         return 1
+    if args.mesh and not report["memory"]["params_sharded_within_pop_slices"]:
+        print(
+            "FAIL: per-member resident param bytes "
+            f"{report['memory']['per_member_resident_bytes']} exceed the sharded "
+            f"bound {report['memory']['sharded_bound_bytes']} — member weights are "
+            "replicated, not model-sharded",
+            file=sys.stderr,
+        )
+        return 1
     if args.sharded and not report["scheduler"]["lpt_strictly_reduces"]:
         print("FAIL: LPT scheduling did not strictly reduce wasted_steps", file=sys.stderr)
         return 1
-    if not args.sharded and not args.smoke and report["speedup"] < 3.0:
+    if not args.sharded and not args.mesh and not args.smoke and report["speedup"] < 3.0:
         print(f"FAIL: population speedup {report['speedup']}x below the 3x target", file=sys.stderr)
         return 1
     return 0

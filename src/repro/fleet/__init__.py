@@ -4,14 +4,18 @@ launch/serve stack.
 Three cooperating modules (see README.md in this directory):
 
 * :mod:`repro.fleet.sharding` — :class:`ShardedPopulationEngine`, the
-  population FAT programs under ``shard_map`` over a "pop" mesh axis (one
-  sub-population per device).
+  population FAT programs under ``shard_map`` over the "pop" axis of a 1-D
+  pop mesh or a 2-D ``("pop", "model")`` fleet mesh (one sub-population per
+  pop slice; member params sharded over the slice's model sub-mesh).
 * :mod:`repro.fleet.scheduler` — :class:`FleetScheduler`, budget-aware
   (LPT) packing of retraining jobs into population chunks, with
-  ``wasted_steps`` accounting.
+  ``wasted_steps`` accounting keyed on the pop-axis extent.
+* :mod:`repro.fleet.capacity` — :func:`suggest_population_size`, sizing
+  population lanes against per-device memory from param/opt bytes.
 * :mod:`repro.fleet.serve` — :class:`FleetServeEngine`, one vmapped serving
   engine advancing N faulty chips' deployed models a token per dispatch.
 """
+from repro.fleet.capacity import suggest_population_size
 from repro.fleet.scheduler import FleetSchedule, FleetScheduler, ScheduledChunk
 from repro.fleet.serve import FleetGenerateResult, FleetServeEngine
 from repro.fleet.sharding import ShardedPopulationEngine
@@ -23,4 +27,5 @@ __all__ = [
     "FleetGenerateResult",
     "FleetServeEngine",
     "ShardedPopulationEngine",
+    "suggest_population_size",
 ]

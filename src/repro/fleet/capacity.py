@@ -1,0 +1,96 @@
+"""Fleet capacity planning — size population lanes against device memory.
+
+A population chunk holds, per member, fp32 master params plus the two AdamW
+moments; with a 2-D ``("pop", "model")`` fleet mesh that state is sharded
+``model_extent``-ways within each pop slice (see ``fleet/sharding.py``), so
+the members a single device can hold grows linearly with the model axis.
+``suggest_population_size`` turns (arch, mesh, per-device memory) into a
+``population_size`` the sharded engine can run without paging — the ROADMAP
+"size ``population_size`` against HBM" item, consumed by
+``benchmarks/efat_bench.py --population-size auto``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["suggest_population_size"]
+
+# fp32 master params + fp32 AdamW m and v (repro.train.optimizer defaults;
+# 'bfloat16' moment_dtype would be 4 + 2 + 2)
+_DEFAULT_BYTES_PER_PARAM = 12
+# no backend-reported limit (host CPU backends): assume a v5e-class 16 GiB
+_FALLBACK_DEVICE_BYTES = 16 << 30
+
+
+def _device_memory_bytes(mesh: Optional[Mesh]) -> int:
+    dev = mesh.devices.flat[0] if mesh is not None else jax.devices()[0]
+    try:
+        stats = dev.memory_stats()
+    except Exception:
+        stats = None
+    if stats and stats.get("bytes_limit"):
+        return int(stats["bytes_limit"])
+    return _FALLBACK_DEVICE_BYTES
+
+
+def suggest_population_size(
+    cfg,
+    mesh: Optional[Mesh] = None,
+    *,
+    hbm_bytes: Optional[int] = None,
+    headroom: float = 0.6,
+    bytes_per_param: int = _DEFAULT_BYTES_PER_PARAM,
+    max_members_per_lane: int = 64,
+) -> int:
+    """Largest population chunk width the mesh can hold resident.
+
+    Parameters
+    ----------
+    cfg : ArchConfig — ``cfg.param_count()`` sets the per-member state size.
+    mesh : fleet mesh (1-D pop or 2-D pop x model). None = a single lane on
+        the default device (the vmap engine's situation).
+    hbm_bytes : per-device memory budget; default: the backend's reported
+        ``bytes_limit`` when available, else 16 GiB.
+    headroom : fraction of ``hbm_bytes`` the member state may use — the rest
+        is activations/gradients for the in-flight update and XLA scratch.
+    bytes_per_param : resident optimizer+param bytes per parameter per
+        member (default fp32 params + fp32 AdamW moments = 12).
+    max_members_per_lane : cap on members per pop slice (compile-shape and
+        latency guard, matching ``population_size`` chunking semantics).
+
+    Returns a population size that is a positive multiple of the pop-axis
+    extent (the sharded engine would round it up anyway). Raises ValueError
+    when even ONE member per lane exceeds the budget — the model needs a
+    bigger model axis, not a smaller population.
+    """
+    if hbm_bytes is None:
+        hbm_bytes = _device_memory_bytes(mesh)
+    if hbm_bytes <= 0:
+        raise ValueError(f"hbm_bytes must be positive, got {hbm_bytes}")
+    if not 0.0 < headroom <= 1.0:
+        raise ValueError(f"headroom must be in (0, 1], got {headroom}")
+
+    pop_extent, model_extent = 1, 1
+    if mesh is not None:
+        sizes = dict(mesh.shape)
+        pop_extent = int(sizes.pop("pop", 1))
+        model_extent = int(math.prod(sizes.values())) if sizes else 1
+
+    member_bytes = int(cfg.param_count()) * int(bytes_per_param)
+    # the model axis shards each member's resident state within a pop slice
+    per_device_member_bytes = max(1, member_bytes // model_extent)
+    budget = int(hbm_bytes * headroom)
+    members_per_lane = budget // per_device_member_bytes
+    if members_per_lane < 1:
+        raise ValueError(
+            f"one member needs {per_device_member_bytes / 2**30:.2f} GiB resident "
+            f"({member_bytes / 2**30:.2f} GiB / model extent {model_extent}) but the "
+            f"budget is {budget / 2**30:.2f} GiB ({headroom:.0%} of "
+            f"{hbm_bytes / 2**30:.2f} GiB) — grow the mesh's model axis"
+        )
+    members_per_lane = min(int(members_per_lane), int(max_members_per_lane))
+    return members_per_lane * pop_extent

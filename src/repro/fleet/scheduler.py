@@ -33,7 +33,15 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
-__all__ = ["ScheduledChunk", "FleetSchedule", "FleetScheduler"]
+__all__ = ["ScheduledChunk", "FleetSchedule", "FleetScheduler", "round_up_to_multiple"]
+
+
+def round_up_to_multiple(x: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` >= ``x`` — THE mesh-tiling rounding.
+    The scheduler's chunk widths and the sharded engine's compiled chunk
+    widths (fleet/sharding.py) must round identically or ``wasted_steps``
+    accounting desyncs from what actually runs; both call this."""
+    return -(-x // multiple) * multiple
 
 
 @dataclass(frozen=True)
@@ -102,15 +110,28 @@ class FleetScheduler:
     POLICIES = ("lpt", "arrival")
 
     def __init__(self, population_size: int, policy: str = "lpt", width_multiple: int = 1):
-        """``width_multiple``: the engine's device-tiling constraint — the
-        sharded engine compiles chunks whose width is a multiple of the pop
-        mesh size (padding lanes included), so waste accounting must round
-        up the same way (trainers pass ``engine.num_shards``)."""
+        """``width_multiple``: the engine's mesh-tiling constraint — the
+        sharded engine compiles chunks whose width is a multiple of the POP-
+        AXIS EXTENT (padding lanes included; on a 2-D ``("pop", "model")``
+        mesh that is the number of pop slices, NOT the device count), so
+        waste accounting must round up the same way. Prefer
+        :meth:`for_engine`, which reads the extent off the engine."""
         if policy not in self.POLICIES:
             raise ValueError(f"unknown schedule policy {policy!r} (use {self.POLICIES})")
         self.population_size = max(1, int(population_size))
         self.policy = policy
         self.width_multiple = max(1, int(width_multiple))
+
+    @classmethod
+    def for_engine(cls, engine, policy: str = "lpt") -> "FleetScheduler":
+        """Scheduler matched to a FAT engine's chunking: population width
+        from the engine, width rounding from its pop-axis extent
+        (``num_shards``; 1 for the vmap/serial engines)."""
+        return cls(
+            engine.population_size,
+            policy=policy,
+            width_multiple=getattr(engine, "num_shards", 1),
+        )
 
     def _order(self, costs: Sequence[float], policy: str) -> list[int]:
         n = len(costs)
@@ -130,7 +151,7 @@ class FleetScheduler:
             # width is min(population_size, n), rounded up to the device
             # tiling — mirror that so waste accounting matches what runs)
             width = min(size, len(order)) if len(order) else size
-            width = -(-width // self.width_multiple) * self.width_multiple
+            width = round_up_to_multiple(width, self.width_multiple)
             chunks.append(
                 ScheduledChunk(
                     indices=idx,

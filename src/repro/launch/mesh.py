@@ -4,8 +4,23 @@ Defined as functions (never module-level constants) so importing this module
 never touches jax device state. The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
 import to obtain placeholder devices; everything else sees the real backend.
+
+Two mesh families live here:
+
+* ``make_production_mesh`` / ``make_host_mesh`` — the model-parallel meshes
+  (``("data", "model")``, optionally ``("pod", ...)``) that
+  ``repro.launch.sharding`` resolves logical param/activation axes onto.
+* ``make_fleet_mesh`` / ``make_pop_mesh`` — the fleet meshes used by
+  ``repro.fleet``: a leading ``"pop"`` axis parallelizes over
+  chips-being-retrained (one sub-population of fault maps per pop slice),
+  and the trailing ``"model"`` axis — when > 1 — gives every pop slice a
+  tensor-parallel sub-mesh so member params can be sharded *within* a slice
+  instead of replicated per member. ``make_pop_mesh`` is the ``model=1``
+  degenerate case, kept 1-D for the single-axis engine path.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -40,22 +55,82 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_pop_mesh(num_devices: int | None = None, axis: str = "pop"):
-    """1-D mesh over the *population* axis — one slice per device, each
-    training (or serving) a sub-population of fault maps.
+def _fleet_device_grid(pop: Optional[int], model: int):
+    """Validated (pop, model) device grid for the fleet meshes.
 
-    This is the fleet-scale mesh (repro.fleet): orthogonal to the
-    data/model meshes above, it parallelizes over chips-being-retrained
-    rather than over one model's tensors. Defaults to every visible device;
-    CPU-testable by exporting
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
-    jax import (a (1,)-mesh on a single device is valid and runs the same
-    program).
+    ``pop=None`` auto-sizes: the largest population extent such that
+    ``pop * model`` fits the backend (i.e. the device count is *clamped*
+    down to the nearest clean tiling instead of failing the reshape).
+    Explicit extents that don't fit raise a ValueError naming the numbers —
+    never the raw numpy reshape error.
     """
     import numpy as np
 
     devs = jax.devices()
-    n = len(devs) if num_devices is None else int(num_devices)
-    if n < 1 or n > len(devs):
-        raise ValueError(f"pop mesh needs 1..{len(devs)} devices, asked for {n}")
-    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))
+    n = len(devs)
+    try:
+        model = int(model)
+    except (TypeError, ValueError):
+        raise ValueError(f"model extent must be an integer, got {model!r}") from None
+    if model < 1:
+        raise ValueError(f"model extent must be >= 1, got {model}")
+    if model > n:
+        raise ValueError(
+            f"model extent {model} exceeds the {n} visible device(s); "
+            "export XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "before the first jax import to force more host devices"
+        )
+    if pop is None:
+        pop = n // model  # clamp: largest population extent that tiles
+    try:
+        pop = int(pop)
+    except (TypeError, ValueError):
+        raise ValueError(f"pop extent must be an integer, got {pop!r}") from None
+    if pop < 1:
+        raise ValueError(f"pop extent must be >= 1, got {pop}")
+    need = pop * model
+    if need > n:
+        raise ValueError(
+            f"fleet mesh {pop}x{model} needs {need} devices, have {n}; "
+            "shrink the mesh or force more host devices via XLA_FLAGS"
+        )
+    return np.array(devs[:need]).reshape(pop, model)
+
+
+def make_fleet_mesh(
+    pop: Optional[int] = None,
+    model: int = 1,
+    *,
+    axis_names: tuple[str, str] = ("pop", "model"),
+):
+    """2-D ``("pop", "model")`` mesh: ``pop`` slices of ``model`` devices.
+
+    The population engine (``repro.fleet.sharding``) runs manual
+    ``shard_map`` collectives only over the leading ``pop`` axis; the
+    trailing ``model`` axis is left to the compiler (GSPMD) so the
+    tensor-parallel rules in ``repro.launch.sharding`` can lay member
+    params out *within* each pop slice. ``pop=None`` takes as many pop
+    slices as tile the backend for the given ``model`` extent (clamping,
+    not failing, when the device count doesn't divide cleanly).
+
+    CPU-testable by exporting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+    jax import; a 1x1 mesh on a single device is valid and runs the same
+    program.
+    """
+    if len(axis_names) != 2:
+        raise ValueError(f"fleet mesh needs exactly 2 axis names, got {axis_names!r}")
+    return jax.sharding.Mesh(_fleet_device_grid(pop, model), tuple(axis_names))
+
+
+def make_pop_mesh(num_devices: Optional[int] = None, axis: str = "pop"):
+    """1-D mesh over the *population* axis — the ``model=1`` degenerate case
+    of :func:`make_fleet_mesh`, kept 1-D for the single-axis engine path.
+
+    One slice per device, each training (or serving) a sub-population of
+    fault maps; orthogonal to the data/model meshes above. Defaults to every
+    visible device. Validation (including ``num_devices`` that exceeds or
+    doesn't cleanly fit the backend) is shared with ``make_fleet_mesh`` and
+    raises clear ValueErrors rather than surfacing a raw reshape failure.
+    """
+    return jax.sharding.Mesh(_fleet_device_grid(num_devices, 1).reshape(-1), (axis,))

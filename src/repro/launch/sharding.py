@@ -9,6 +9,16 @@ and that is not already used by an earlier dim, and falls back to
 replication otherwise. This is what lets one rule set drive llama3-405b
 (128 heads / 16-way TP) and smollm-135m (9 heads -> replicated attention,
 MLP/vocab still tensor-parallel) without per-arch special cases.
+
+The same rules compose with the fleet layer's 2-D ``("pop", "model")``
+meshes (``repro.launch.mesh.make_fleet_mesh``): a ``MeshContext`` may
+*reserve* axes owned by an outer engine (the fleet engine reserves
+``"pop"``), and resolution silently skips candidates whose mesh axes are
+reserved or absent from the mesh. Model rules therefore resolve *inside* a
+pop slice — params shard over ``"model"`` within each slice — while specs
+that mention neither reserved nor present axes come out replicated, i.e.
+broadcast along ``"pop"``. Which axes the fleet engine owns vs. which the
+model rules own is documented in ``src/repro/fleet/README.md``.
 """
 from __future__ import annotations
 
@@ -31,6 +41,10 @@ class MeshContext:
     mesh: Mesh
     rules: dict[str, tuple[AxisCandidate, ...]]
     units: dict[str, int] = field(default_factory=dict)
+    # mesh axes owned by an outer engine (e.g. the fleet layer's "pop" axis):
+    # resolution must never assign them to a logical dim, even if a rule
+    # names them — the engine shards the member axis itself via shard_map
+    reserved_axes: tuple[str, ...] = ()
 
     def axis_size(self, cand: AxisCandidate) -> int:
         names = (cand,) if isinstance(cand, str) else cand
@@ -61,8 +75,14 @@ def mesh_context(ctx: Optional[MeshContext]):
 
 
 def resolve_spec(axes: LogicalAxes, shape: Sequence[int], ctx: MeshContext) -> P:
-    """Logical axes -> PartitionSpec for a concrete shape under ctx rules."""
-    used: set[str] = set()
+    """Logical axes -> PartitionSpec for a concrete shape under ctx rules.
+
+    Candidates whose mesh axes are reserved (``ctx.reserved_axes``) or not
+    present in ``ctx.mesh`` are skipped, so one rule set resolves on the
+    production ``("data", "model")`` meshes and inside a fleet mesh's pop
+    slice (no ``"data"`` axis, ``"pop"`` reserved) alike.
+    """
+    used: set[str] = set(ctx.reserved_axes)
     parts: list = []
     for name, dim in zip(axes, shape):
         entry = None
@@ -71,6 +91,8 @@ def resolve_spec(axes: LogicalAxes, shape: Sequence[int], ctx: MeshContext) -> P
             for cand in ctx.rules.get(name, ()):
                 names = (cand,) if isinstance(cand, str) else tuple(cand)
                 if any(a in used for a in names):
+                    continue
+                if any(a not in ctx.mesh.shape for a in names):
                     continue
                 size = ctx.axis_size(cand)
                 if dim % unit == 0 and (dim // unit) % size == 0 and size > 1:
@@ -133,7 +155,17 @@ def make_rules(cfg, *, multi_pod: bool = False, fsdp: Optional[bool] = None) -> 
 def make_rules_for_mesh(
     cfg, mesh: Mesh, *, fsdp: Optional[bool] = None, seq_shard: bool = False,
     seq_rule: bool = False, moe_slot_shard: bool = False,
+    reserved_axes: tuple[str, ...] = (),
 ) -> MeshContext:
+    """Build the arch's MeshContext on an arbitrary mesh.
+
+    ``reserved_axes`` marks mesh axes owned by an outer engine so resolution
+    never assigns them: the fleet layer passes ``("pop",)`` with its 2-D
+    ``("pop", "model")`` mesh, making the model rules resolve per pop slice
+    (replicated specs broadcast along "pop"; "model" rules shard within the
+    slice). Rules that name axes absent from ``mesh`` (e.g. "data" on a
+    fleet mesh) are skipped at resolution time.
+    """
     if fsdp is None:
         fsdp = cfg.param_count() > 3e9
     has_pod = "pod" in mesh.shape
@@ -173,4 +205,6 @@ def make_rules_for_mesh(
         "layers": (),
     }
     units = {"qkv": hd, "kv": hd}
-    return MeshContext(mesh=mesh, rules=rules, units=units)
+    return MeshContext(
+        mesh=mesh, rules=rules, units=units, reserved_axes=tuple(reserved_axes)
+    )

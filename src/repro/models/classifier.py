@@ -21,6 +21,21 @@ def init_classifier(cfg, key, in_dim: int):
     return params
 
 
+def classifier_param_axes(cfg) -> dict:
+    """Logical-axes tree mirroring ``init_classifier``'s structure (see
+    ``repro.launch.sharding``): each weight's output dim carries the
+    shardable name ('mlp' / 'vocab' on the logits layer), the contraction
+    dim stays replicated — the layout the fleet engine's 2-D meshes resolve
+    per pop slice."""
+    n = cfg.num_layers
+    axes: dict = {}
+    for i in range(n):
+        out_ax = "vocab" if i == n - 1 else "mlp"
+        axes[f"w{i}"] = ("embed", out_ax)
+        axes[f"b{i}"] = (out_ax,)
+    return axes
+
+
 def classifier_forward(params, x, cfg, ctx: FaultContext | None = None):
     ctx = ctx or healthy()
     n = cfg.num_layers

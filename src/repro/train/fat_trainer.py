@@ -30,7 +30,7 @@ from repro.core.masking import from_fault_map, healthy, mask_params
 from repro.data.synthetic import TokenStream, make_classification_task
 from repro.fleet.scheduler import FleetScheduler
 from repro.models import model as M
-from repro.models.classifier import classifier_loss, init_classifier
+from repro.models.classifier import classifier_loss, classifier_param_axes, init_classifier
 from repro.train.optimizer import AdamWConfig
 from repro.train.population import make_fat_engine
 
@@ -52,13 +52,20 @@ class _EngineBackedTrainer:
     #   _train_batch_fn  — consolidated-FAT stream (batch_fn(0..steps-1))
 
     def _make_scheduler(self, policy: str) -> FleetScheduler:
-        return FleetScheduler(
-            self.engine.population_size,
-            policy=policy,
-            # sharded engine chunks tile its pop mesh; waste accounting must
-            # count the same padding lanes the compiled chunk actually runs
-            width_multiple=getattr(self.engine, "num_shards", 1),
-        )
+        # sharded engine chunks tile its pop-axis extent; waste accounting
+        # must count the same padding lanes the compiled chunk actually runs
+        return FleetScheduler.for_engine(self.engine, policy=policy)
+
+    @staticmethod
+    def _engine_kwargs(engine: str, cfg, param_axes, engine_kwargs: Optional[dict]) -> dict:
+        """Thread the arch + param layout into the engine: every engine
+        takes ``param_axes`` (vmap/serial ignore it); the sharded engine
+        also needs ``cfg`` to build tensor-parallel rules for 2-D meshes."""
+        kw = dict(engine_kwargs or {})
+        kw.setdefault("param_axes", param_axes)
+        if engine == "sharded":
+            kw.setdefault("cfg", cfg)
+        return kw
 
     def evaluate_params(self, params, ctx) -> float:
         return self.engine.evaluate_one(params, ctx)
@@ -164,7 +171,7 @@ class ClassifierFATTrainer(_EngineBackedTrainer):
             higher_is_better=True,
             eval_every=eval_every,
             population_size=population_size,
-            **(engine_kwargs or {}),
+            **self._engine_kwargs(engine, cfg, classifier_param_axes(cfg), engine_kwargs),
         )
         self.scheduler = self._make_scheduler(schedule)
         key = jax.random.PRNGKey(seed)
@@ -227,7 +234,7 @@ class LMFATTrainer(_EngineBackedTrainer):
             higher_is_better=metric != "loss",  # higher-is-better protocol
             eval_every=eval_every,
             population_size=population_size,
-            **(engine_kwargs or {}),
+            **self._engine_kwargs(engine, cfg, self.specs, engine_kwargs),
         )
         self.scheduler = self._make_scheduler(schedule)
         self.base_params = self.engine.fit_batch(

@@ -75,6 +75,10 @@ class PopulationFATEngine:
     eval_every : periodic-eval interval inside ``steps_to_constraint_batch``.
     population_size : max members per compiled program; larger batches are
         chunked (memory / compile-shape trade-off, see train/README.md).
+    param_axes : optional logical-axes pytree mirroring the params structure
+        (``repro.launch.sharding`` names). Ignored by this engine and the
+        serial reference; the fleet engine uses it to lay member params out
+        over the "model" axis of a 2-D ``("pop", "model")`` mesh.
     """
 
     kind = "population"
@@ -89,6 +93,7 @@ class PopulationFATEngine:
         higher_is_better: bool = True,
         eval_every: int = 5,
         population_size: int = 16,
+        param_axes: Optional[Any] = None,
     ):
         self.loss_fn = loss_fn
         self.opt_cfg = opt_cfg
@@ -96,6 +101,7 @@ class PopulationFATEngine:
         self.higher_is_better = higher_is_better
         self.eval_every = int(eval_every)
         self.population_size = max(1, int(population_size))
+        self.param_axes = param_axes
         self._eval_stack = _stack_trees(list(eval_batches))
         self._grad = jax.value_and_grad(loss_fn, has_aux=True)
         # compiled programs are cached per (batch_fn, context mode): the
@@ -114,14 +120,15 @@ class PopulationFATEngine:
     def _ctx(ok, mode: str) -> FaultContext:
         return healthy() if ok is None else FaultContext(ok=ok, mode=mode)
 
-    def _member_eval(self, params, ok, mode: str):
+    def _member_eval(self, params, ok, mode: str, eval_stack=None):
         ctx = self._ctx(ok, mode)
+        stack = self._eval_stack if eval_stack is None else eval_stack
 
         def one(batch):
             v = self.loss_fn(params, batch, ctx)[1][self.metric]
             return v if self.higher_is_better else -v
 
-        return jnp.mean(jax.vmap(one)(self._eval_stack))
+        return jnp.mean(jax.vmap(one)(stack))
 
     def _member_update(self, params, opt, ok, batch, mode: str):
         (_, _m), g = self._grad(params, batch, self._ctx(ok, mode))
@@ -135,10 +142,39 @@ class PopulationFATEngine:
         opt_pop = jax.vmap(lambda p: adamw_init(p, self.opt_cfg))(params_pop)
         return params_pop, opt_pop
 
+    # -- member-state layout hooks ---------------------------------------
+    # The run bodies thread per-member (params, opt) through these at every
+    # loop-carry boundary (stored layout) and before every update/eval
+    # (compute layout). They are identity here — the fleet engine overrides
+    # them to keep member state sharded over a 2-D mesh's "model" axis
+    # between steps while gathering full-shape replicas for the math, so
+    # per-member trajectories stay bit-identical to the single-device path.
+
+    def _constrain_member_state(self, params_pop, opt_pop):
+        """Persistent (loop-carry / program-output) layout of member state."""
+        return params_pop, opt_pop
+
+    def _gather_member_state(self, params_pop, opt_pop):
+        """Layout member state for an update step (full-shape by default)."""
+        return params_pop, opt_pop
+
+    def _gather_member_params(self, params_pop):
+        """Layout member params for evaluation (full-shape by default)."""
+        return params_pop
+
+    def _constrain_batch(self, tree):
+        """Layout of non-member data entering the math (train/eval batches,
+        stacked masks): identity here; the fleet engine pins these replicated
+        along the model axis so compute stays at single-device shapes."""
+        return tree
+
     def _eval_pop(self, params_pop, ok_pop, mode: str):
+        params_pop = self._gather_member_params(params_pop)
+        ok_pop = None if ok_pop is None else self._constrain_batch(ok_pop)
+        stack = self._constrain_batch(self._eval_stack)
         ok_axis = None if ok_pop is None else 0
         return jax.vmap(
-            lambda p, ok: self._member_eval(p, ok, mode), in_axes=(0, ok_axis)
+            lambda p, ok: self._member_eval(p, ok, mode, stack), in_axes=(0, ok_axis)
         )(params_pop, ok_pop)
 
     def _eval_run(self, mode: str):
@@ -167,22 +203,27 @@ class PopulationFATEngine:
         def run(params0, ok_pop, budgets):
             n = budgets.shape[0]
             ok_axis = None if ok_pop is None else 0
+            if ok_pop is not None:
+                ok_pop = self._constrain_batch(ok_pop)
             params_pop, opt_pop = self._broadcast_members(params0, n)
+            params_pop, opt_pop = self._constrain_member_state(params_pop, opt_pop)
             update = jax.vmap(
                 lambda p, o, ok, b: self._member_update(p, o, ok, b, mode),
                 in_axes=(0, 0, ok_axis, None),
             )
 
             def body(i, state):
-                params, opt = state
-                new_params, new_opt = update(params, opt, ok_pop, batch_fn(i))
+                params, opt = self._gather_member_state(*state)
+                new_params, new_opt = update(
+                    params, opt, ok_pop, self._constrain_batch(batch_fn(i))
+                )
                 active = i < budgets  # (n,)
 
                 def sel(new, old):
                     a = active.reshape((n,) + (1,) * (new.ndim - 1))
                     return jnp.where(a, new, old)
 
-                return (
+                return self._constrain_member_state(
                     jax.tree_util.tree_map(sel, new_params, params),
                     jax.tree_util.tree_map(sel, new_opt, opt),
                 )
@@ -207,6 +248,7 @@ class PopulationFATEngine:
         def run(params0, ok_pop, constraint, max_steps):
             n = ok_pop.shape[0]
             max_steps = jnp.asarray(max_steps, jnp.int32)
+            ok_pop = self._constrain_batch(ok_pop)
             params_pop, opt_pop = self._broadcast_members(params0, n)
             update = jax.vmap(
                 lambda p, o, ok, b: self._member_update(p, o, ok, b, mode),
@@ -216,6 +258,7 @@ class PopulationFATEngine:
             base = self._eval_pop(params_pop, ok_pop, mode)
             sentinel = max_steps + 1
             crossed = jnp.where(base >= constraint, jnp.int32(0), sentinel)
+            params_pop, opt_pop = self._constrain_member_state(params_pop, opt_pop)
 
             def cond(carry):
                 step, _params, _opt, cr = carry
@@ -223,10 +266,13 @@ class PopulationFATEngine:
 
             def body(carry):
                 step, params, opt, cr = carry
+                params, opt = self._gather_member_state(params, opt)
 
                 def train_one(i, state):
                     p, o = state
-                    return update(p, o, ok_pop, batch_fn(step + i + 1))
+                    return update(
+                        p, o, ok_pop, self._constrain_batch(batch_fn(step + i + 1))
+                    )
 
                 params, opt = jax.lax.fori_loop(0, ee, train_one, (params, opt))
                 step = step + ee
@@ -235,6 +281,7 @@ class PopulationFATEngine:
                 # step the serial reference never evaluated, so it can't hit
                 hit = (metric >= constraint) & (cr > max_steps) & (step <= max_steps)
                 cr = jnp.where(hit, step.astype(cr.dtype), cr)
+                params, opt = self._constrain_member_state(params, opt)
                 return step, params, opt, cr
 
             _, _, _, crossed = jax.lax.while_loop(
@@ -283,8 +330,14 @@ class PopulationFATEngine:
             trained = self._fit_programs[key](
                 params0, stacked.ok, jnp.asarray(chunk_budgets, jnp.int32)
             )
+            self._record_fit_output(trained, keep, size)
             out.extend(_member_slice(trained, i) for i in range(keep))
         return out
+
+    def _record_fit_output(self, trained, keep: int, width: int) -> None:
+        """Hook on each raw (still member-stacked) fit-program output before
+        padding lanes are sliced off — the fleet engine records per-device
+        resident-byte stats here; no-op otherwise."""
 
     def steps_to_constraint_batch(
         self,
@@ -358,8 +411,10 @@ class SerialFATEngine:
         higher_is_better: bool = True,
         eval_every: int = 5,
         population_size: int = 16,  # interface parity; serial chunks are 1-wide
+        param_axes: Optional[Any] = None,  # interface parity; serial never shards
     ):
         self.population_size = 1  # one member at a time — schedulers see no packing
+        self.param_axes = param_axes
         self.loss_fn = loss_fn
         self.opt_cfg = opt_cfg
         self.metric = metric

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch
+from repro.configs import get_arch, reduce_config
 from repro.core import (
     EFAT,
     EFATConfig,
@@ -21,7 +21,7 @@ from repro.core import (
 )
 from repro.core.resilience import measure_resilience
 from repro.kernels.common import dtype_tol
-from repro.train.fat_trainer import ClassifierFATTrainer
+from repro.train.fat_trainer import ClassifierFATTrainer, LMFATTrainer
 from repro.train.population import PopulationFATEngine, SerialFATEngine, make_fat_engine
 
 CFG = get_arch("paper-mlp")
@@ -202,6 +202,65 @@ def test_execute_plan_population_path(trainers):
     assert sorted(c for link in result.plan.links for c in link) == list(range(6))
     assert set(result.chip_metrics) == set(range(6))
     assert result.satisfied_fraction >= 0.5, result.summary()
+
+
+# ---------------------------------------------------------------------------
+# pallas-mode fault contexts under vmap (reduced-LM population smoke)
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_mode_population_contexts_under_vmap():
+    """A population of mode='pallas' contexts runs through the vmap engine:
+    on CPU backends the masked GEMM falls back to the fap math, so the
+    population eval must equal both the serial reference and the fap-mode
+    population bit for bit — pinning that batched pallas contexts are legal
+    under vmap (the accelerator path swaps only the GEMM kernel)."""
+    cfg = reduce_config(get_arch("qwen3-0.6b"))
+    tr = LMFATTrainer(
+        cfg, pretrain_steps=5, eval_batches=1, population_size=4,
+        batch_size=2, seq_len=16,
+    )
+    fms = [random_fault_map(i, cfg.array_rows, cfg.array_cols, 0.2) for i in range(3)]
+    pallas_ctxs = [from_fault_map(fm, mode="pallas") for fm in fms]
+    fap_ctxs = [from_fault_map(fm) for fm in fms]
+    stacked = stack_contexts(pallas_ctxs)
+    assert stacked.mode == "pallas" and stacked.population == 3
+
+    params = [tr.base_params] * 3
+    ev_pallas = tr.engine.evaluate_batch(params, pallas_ctxs)
+    ev_fap = tr.engine.evaluate_batch(params, fap_ctxs)
+    assert ev_pallas == ev_fap  # same math, different static mode
+    ser = SerialFATEngine(
+        loss_fn=tr.engine.loss_fn, opt_cfg=tr.opt_cfg,
+        eval_batches=tr._evals, metric=tr.metric, eval_every=tr.eval_every,
+    )
+    ev_ser = ser.evaluate_batch(params, pallas_ctxs)
+    assert ev_pallas == pytest.approx(ev_ser, abs=1e-6)
+    # a short pallas-mode population fit matches the serial trajectories
+    p_pop = tr.engine.fit_batch(tr.base_params, pallas_ctxs, [2, 2, 2], tr._train_batch_fn)
+    p_ser = ser.fit_batch(tr.base_params, pallas_ctxs, [2, 2, 2], tr._train_batch_fn)
+    rtol, atol = dtype_tol(jnp.float32, atol_scale=100)
+    for a, b in zip(p_pop, p_ser):
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+
+
+def test_masked_matmul_interpret_kernel_under_vmap():
+    """The Pallas masked-matmul kernel itself (interpret backend) accepts a
+    vmapped mask axis — the exact shape the population engine feeds it on
+    accelerator backends."""
+    from repro.kernels.masked_matmul.ops import masked_matmul
+    from repro.kernels.masked_matmul.ref import masked_matmul_ref
+
+    key = jax.random.PRNGKey(0)
+    kx, kw, km = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (4, 16))
+    w = jax.random.normal(kw, (16, 24))
+    oks = (jax.random.uniform(km, (3, 8, 8)) > 0.25).astype(jnp.float32)
+    got = jax.vmap(lambda ok: masked_matmul(x, w, ok, interpret=True))(oks)
+    want = jax.vmap(lambda ok: masked_matmul_ref(x, w, ok))(oks)
+    rtol, atol = dtype_tol(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
 
 
 # ---------------------------------------------------------------------------

@@ -99,6 +99,46 @@ def test_seq_carry_rule_only_when_enabled():
     )
 
 
+def test_fleet_mesh_rules_resolve_inside_pop_slice():
+    """On a 2-D ("pop", "model") fleet mesh with the pop axis reserved, the
+    model rules resolve per pop slice: 'model' shards within the slice,
+    rules naming absent axes ('data') fall back to replication (= broadcast
+    along "pop"), and the reserved axis is never assigned even when a rule
+    names it explicitly."""
+    cfg = get_arch("smollm-135m")
+    ctx = _fake_mesh_ctx(
+        cfg, (4, 2), ("pop", "model"), fsdp=False, reserved_axes=("pop",)
+    )
+    assert ctx.reserved_axes == ("pop",)
+    # mlp 1536 % 2 == 0 -> sharded over the slice's model axis
+    assert resolve_spec(("embed", "mlp"), (576, 1536), ctx) == P(None, "model")
+    # 'batch' candidates name only 'data', absent from the fleet mesh ->
+    # replicated (broadcast along "pop"), not a KeyError
+    assert resolve_spec(("batch", "embed"), (8, 576), ctx) == P()
+    # a rule naming the reserved pop axis is skipped, later candidates win
+    ctx.rules["mlp"] = ("pop", "model")
+    assert resolve_spec(("embed", "mlp"), (576, 1536), ctx) == P(None, "model")
+    ctx.rules["mlp"] = ("pop",)
+    assert resolve_spec(("embed", "mlp"), (576, 1536), ctx) == P()
+
+
+def test_classifier_axes_resolve_on_fleet_mesh():
+    from repro.models.classifier import classifier_param_axes
+
+    cfg = get_arch("paper-mlp")
+    ctx = _fake_mesh_ctx(
+        cfg, (4, 2), ("pop", "model"), fsdp=False, reserved_axes=("pop",)
+    )
+    axes = classifier_param_axes(cfg)
+    assert set(axes) == {f"{k}{i}" for k in "wb" for i in range(cfg.num_layers)}
+    # hidden weights shard their output dim; the contraction dim stays
+    # replicated (full-dot compute, gathered activations)
+    assert resolve_spec(axes["w0"], (32, cfg.d_ff), ctx) == P(None, "model")
+    assert resolve_spec(axes["b0"], (cfg.d_ff,), ctx) == P("model")
+    last = cfg.num_layers - 1
+    assert resolve_spec(axes[f"w{last}"], (cfg.d_ff, cfg.vocab_size), ctx) == P(None, "model")
+
+
 def test_launch_policy_scaling():
     big = launch_policy(get_arch("llama3-405b"), SHAPES["train_4k"])
     assert big.fsdp and big.seq_shard and big.microbatches > 1
