@@ -1,14 +1,19 @@
 """Serve a whole fleet of faulty chips' deployed models in ONE program.
 
-The deployment half of eFAT at fleet scale: each chip runs the fault-aware
-weights its retraining job shipped, under its own fault map. Per-chip
-``ServeEngine`` loops cost N Python generate loops; ``FleetServeEngine``
-(repro.fleet) stacks the N (params, FaultContext) pairs and vmaps the fused
-sampling+decode step over the chip axis, so the entire fleet advances one
-token per dispatch — and greedy decoding reproduces every per-chip engine
-token-for-token.
+The deployment half of eFAT at fleet scale, as *request streams*: each chip
+runs the fault-aware weights its retraining job shipped, under its own
+fault map, and consumes its OWN ragged stream of requests (mixed prompt
+lengths, mixed budgets, staggered arrivals) through its own
+continuous-batch slot table over a paged KV cache. One
+``shard_map``-over-the-pop-mesh dispatch advances every chip's in-flight
+slots a token (``ShardedFleetServeEngine``), so no chip waits on another
+chip's traffic — and greedy decoding still reproduces a per-chip
+``ContinuousBatchingEngine`` token-for-token.
 
-    PYTHONPATH=src python examples/fleet_serve.py [--chips 4]
+Force a multi-device CPU mesh to see real sharding:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/fleet_serve.py [--chips 4]
 """
 import argparse
 import time
@@ -20,9 +25,9 @@ from repro.configs import get_arch, reduce_config
 from repro.core import from_fault_map, healthy, random_fault_map
 from repro.core.masking import mask_params
 from repro.data.synthetic import TokenStream
-from repro.fleet import FleetServeEngine
+from repro.fleet import ShardedFleetServeEngine
 from repro.models import model as M
-from repro.serve.engine import ServeEngine
+from repro.serve import ContinuousBatchingEngine, Request
 from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.step import make_train_step
 
@@ -30,7 +35,6 @@ from repro.train.step import make_train_step
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--chips", type=int, default=4)
-    ap.add_argument("--tokens", type=int, default=12)
     args = ap.parse_args()
 
     cfg = reduce_config(get_arch("qwen3-0.6b"))
@@ -58,33 +62,56 @@ def main():
             p, o, _ = train(p, o, stream.batch_at(500 + i), ctx)
         chips.append((mask_params(p, ctx), ctx, fm.fault_rate))
 
-    prompts = stream.batch_at(42)["tokens"][:4, :16]
+    # each chip gets its OWN traffic: different lengths, budgets, arrivals
+    def stream_for(c: int) -> list[Request]:
+        tok = lambda i, n: np.asarray(stream.batch_at(60 + 10 * c + i)["tokens"][0, :n])
+        return [
+            Request(0, tok(0, 8 + 2 * c), max_new_tokens=4 + 3 * c),
+            Request(1, tok(1, 12), max_new_tokens=16 - 2 * c),
+            Request(2, tok(2, 6), max_new_tokens=6, arrival=2 + c),
+            Request(3, tok(3, 10), max_new_tokens=8, arrival=4),
+        ]
+
+    streams = [stream_for(c) for c in range(args.chips)]
 
     t0 = time.time()
-    fleet_eng = FleetServeEngine(
-        cfg, [p for p, _, _ in chips], [c for _, c, _ in chips], max_len=64
+    fleet_eng = ShardedFleetServeEngine(
+        cfg, [p for p, _, _ in chips], [c for _, c, _ in chips],
+        num_slots=2, page_size=8, num_pages=64,
     )
-    out = fleet_eng.generate(prompts, max_new_tokens=args.tokens)
+    outs, stats = fleet_eng.serve(streams)
     t_fleet = time.time() - t0
-    n_tok = out.tokens.shape[0] * out.tokens.shape[1] * args.tokens
-    print(f"fleet engine: {len(chips)} chips x {prompts.shape[0]} prompts x "
-          f"{args.tokens} tokens in {t_fleet:.2f}s ({n_tok / t_fleet:.0f} tok/s)")
+    print(
+        f"fleet engine: {len(chips)} chips (pop mesh extent "
+        f"{int(fleet_eng.mesh.shape['pop'])}) served "
+        f"{stats.emitted_tokens} tokens across {stats.admitted} ragged requests "
+        f"in {stats.decode_dispatches} fused dispatches / {t_fleet:.2f}s "
+        f"(slot utilization {stats.slot_utilization:.0%})"
+    )
 
     t0 = time.time()
-    for i, (p, ctx, _) in enumerate(chips):
-        ref = ServeEngine(cfg, p, ctx, max_len=64).generate(
-            prompts, max_new_tokens=args.tokens
-        )
-        toks_i, _ = out.chip(i)
-        assert np.array_equal(np.asarray(toks_i), np.asarray(ref.tokens)), f"chip {i}"
+    per_chip_dispatches = 0
+    for c, (p, ctx, _) in enumerate(chips):
+        ref, ref_stats = ContinuousBatchingEngine(
+            cfg, p, ctx, num_slots=2, page_size=8, num_pages=64
+        ).serve(streams[c])
+        per_chip_dispatches += ref_stats.decode_dispatches
+        for rid, out in ref.items():
+            assert np.array_equal(outs[c][rid].tokens, out.tokens), (c, rid)
     t_serial = time.time() - t0
-    print(f"per-chip engines (reference): {t_serial:.2f}s — fleet output matches "
-          f"token-for-token; {t_serial / t_fleet:.2f}x amortization")
+    print(
+        f"per-chip engines (reference): {per_chip_dispatches} dispatches / "
+        f"{t_serial:.2f}s — fleet output matches token-for-token; "
+        f"{per_chip_dispatches / stats.decode_dispatches:.2f}x dispatch amortization"
+    )
 
-    for i, (_, _, rate) in enumerate(chips):
-        print(f"  chip {i}: fault_rate={rate:.2f} "
-              f"mean_logprob={float(out.logprobs[i].mean()):.3f} "
-              f"continuation={out.tokens[i, 0, 16:].tolist()}")
+    for c, (_, _, rate) in enumerate(chips):
+        o = outs[c]
+        lead = o[0]
+        print(
+            f"  chip {c}: fault_rate={rate:.2f} requests={len(o)} "
+            f"ttft(rid0)={lead.ttft} continuation={lead.tokens.tolist()}"
+        )
 
 
 if __name__ == "__main__":

@@ -13,11 +13,18 @@ Three cooperating modules (see README.md in this directory):
 * :mod:`repro.fleet.capacity` — :func:`suggest_population_size`, sizing
   population lanes against per-device memory from param/opt bytes.
 * :mod:`repro.fleet.serve` — :class:`FleetServeEngine`, one vmapped serving
-  engine advancing N faulty chips' deployed models a token per dispatch.
+  engine advancing N faulty chips' deployed models a token per dispatch, and
+  :class:`ShardedFleetServeEngine`, continuous-batch fleet serving under
+  ``shard_map`` over the pop mesh — one ragged request stream and paged-KV
+  slot table per chip.
 """
 from repro.fleet.capacity import suggest_population_size
 from repro.fleet.scheduler import FleetSchedule, FleetScheduler, ScheduledChunk
-from repro.fleet.serve import FleetGenerateResult, FleetServeEngine
+from repro.fleet.serve import (
+    FleetGenerateResult,
+    FleetServeEngine,
+    ShardedFleetServeEngine,
+)
 from repro.fleet.sharding import ShardedPopulationEngine
 
 __all__ = [
@@ -26,6 +33,7 @@ __all__ = [
     "ScheduledChunk",
     "FleetGenerateResult",
     "FleetServeEngine",
+    "ShardedFleetServeEngine",
     "ShardedPopulationEngine",
     "suggest_population_size",
 ]

@@ -1,4 +1,4 @@
-"""Multi-chip serving — one vmapped engine serving a whole fleet's models.
+"""Multi-chip serving — vmapped and shard_mapped engines for a whole fleet.
 
 The deployment half of eFAT produces one fault-aware artifact per
 retraining job, each deployed on chips with their own fault maps. Evaluating
@@ -15,8 +15,17 @@ chip's own ``ServeEngine`` token-for-token (pinned in tests/test_fleet.py);
 with temperature > 0 each chip samples from its own key stream (the fleet
 key is split once per chip).
 
-Prompts are shared across chips — the fleet-evaluation use case is "run the
-same prompt set through every deployed model and compare".
+``FleetServeEngine`` shares one prompt batch across chips — the
+fleet-evaluation use case is "run the same prompt set through every
+deployed model and compare". ``ShardedFleetServeEngine`` is the
+production-shaped tier: chips map onto the devices of a "pop" mesh
+(``repro.launch.mesh.make_pop_mesh``, mirroring the training-side
+``ShardedPopulationEngine``), and every chip consumes its *own* ragged
+request stream through its own continuous-batch slot table over a paged KV
+cache — the masked form of the same fused step, under ``shard_map``, so
+one dispatch advances every chip's in-flight slots and no chip waits for
+another chip's prompts. Greedy per-chip outputs are pinned against
+per-chip ``ContinuousBatchingEngine`` runs (tests/test_serve_continuous.py).
 """
 from __future__ import annotations
 
@@ -25,13 +34,25 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.masking import FaultContext, healthy, stack_contexts
+from repro.launch.mesh import make_pop_mesh
 from repro.models import model as M
+from repro.serve.continuous import (
+    Request,
+    RequestOutput,
+    ServeStats,
+    _SlotTable,
+    prefill_to_chain,
+)
 from repro.serve.engine import make_sample_decode
+from repro.serve.kvcache import DEFAULT_PAGE_SIZE, PageAllocator, page_bytes
 from repro.train.population import _stack_trees
 
-__all__ = ["FleetGenerateResult", "FleetServeEngine"]
+__all__ = ["FleetGenerateResult", "FleetServeEngine", "ShardedFleetServeEngine"]
 
 
 @dataclass
@@ -113,3 +134,237 @@ class FleetServeEngine:
         return FleetGenerateResult(
             tokens=jnp.concatenate(toks, axis=2), logprobs=jnp.stack(lps, axis=2)
         )
+
+
+class ShardedFleetServeEngine:
+    """Sharded, ragged fleet serving: chips → devices, streams → slot tables.
+
+    Each chip ``c`` runs its own continuous-batch slot table (paged KV
+    cache, admission on arrival, retirement on EOS/budget — the same loop
+    as ``repro.serve.continuous.ContinuousBatchingEngine``) over its own
+    request stream; ONE ``shard_map``-over-the-pop-mesh dispatch advances
+    every chip's in-flight slots a token. The chip axis tiles the mesh
+    (``len(params_list)`` must be a multiple of the pop extent; chips
+    beyond the extent vmap within a device, mirroring how the training-side
+    ``ShardedPopulationEngine`` packs sub-populations into pop slices).
+
+    Greedy decoding is argmax per slot, so every chip's outputs reproduce a
+    per-chip ``ContinuousBatchingEngine`` on the same stream; with
+    temperature > 0 each chip consumes its own key stream (the fleet key is
+    split once per chip), so runs are reproducible per chip and chips'
+    samples are independent.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params_list: Sequence,
+        ctxs: Optional[Sequence[Optional[FaultContext]]] = None,
+        *,
+        mesh=None,
+        axis_name: str = "pop",
+        num_slots: int = 4,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        num_pages: int = 128,
+        max_pages_per_seq: Optional[int] = None,
+        pad_id: int = 0,
+    ):
+        n = len(params_list)
+        if n == 0:
+            raise ValueError("ShardedFleetServeEngine needs at least one chip")
+        if cfg.has_ssm:
+            raise ValueError(
+                f"continuous fleet serving supports attention families only; "
+                f"{cfg.family!r} carries unpaged SSM state"
+            )
+        if cfg.is_encoder:
+            raise ValueError("encoder-only arch has no decode path")
+        ctxs = list(ctxs) if ctxs is not None else [healthy()] * n
+        if len(ctxs) != n:
+            raise ValueError(f"{n} params sets but {len(ctxs)} fault contexts")
+        if mesh is None:
+            # largest pop extent that both fits the backend and tiles the fleet
+            ndev = len(jax.devices())
+            extent = max(d for d in range(1, min(n, ndev) + 1) if n % d == 0)
+            mesh = make_pop_mesh(extent, axis=axis_name)
+        if axis_name not in mesh.shape:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.shape)} lack population axis {axis_name!r}"
+            )
+        extent = int(mesh.shape[axis_name])
+        if n % extent != 0:
+            raise ValueError(
+                f"{n} chips don't tile the {extent}-slice {axis_name!r} mesh; "
+                "pad the fleet or pass a mesh whose pop extent divides it"
+            )
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.num_chips = n
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_pages_per_seq = max_pages_per_seq or (num_pages - 1)
+        self.pad_id = pad_id
+        self._page_bytes = page_bytes(cfg, page_size)
+        self.params_list = list(params_list)
+        self.ctxs = [c or healthy() for c in ctxs]
+        self.params = _stack_trees(self.params_list)
+        self.ctx = stack_contexts(self.ctxs)
+
+        sample = make_sample_decode(cfg, pad_id=pad_id)
+        mode = self.ctx.mode
+        pa = P(axis_name)
+        if self.ctx.ok is None:
+            hctx = healthy()
+
+            def chip_step(p, cur, cache, key, temp, eos, active, remaining):
+                return sample(
+                    p, cur, cache, key, hctx, temp,
+                    active=active, eos_id=eos, remaining=remaining,
+                )
+
+            vmapped = jax.vmap(chip_step, in_axes=(0, 0, 0, 0, None, None, 0, 0))
+            in_specs = (pa, pa, pa, pa, P(), P(), pa, pa)
+        else:
+
+            def chip_step(p, cur, cache, key, ok, temp, eos, active, remaining):
+                return sample(
+                    p, cur, cache, key, FaultContext(ok=ok, mode=mode), temp,
+                    active=active, eos_id=eos, remaining=remaining,
+                )
+
+            vmapped = jax.vmap(chip_step, in_axes=(0, 0, 0, 0, 0, None, None, 0, 0))
+            in_specs = (pa, pa, pa, pa, pa, P(), P(), pa, pa)
+        self._step = jax.jit(
+            shard_map(
+                vmapped,
+                mesh=self.mesh,
+                in_specs=in_specs,
+                out_specs=(pa,) * 7,
+                check_rep=False,
+            )
+        )
+        self._prefill_admit = jax.jit(
+            self._prefill_admit_fn, static_argnames=("chain",)
+        )
+
+    # -- jitted admission: prefill one chip's request, splice into its slot --
+
+    def _prefill_admit_fn(
+        self, params_c, tokens, ctx_c, cache, cur, active, remaining,
+        chip, slot, pids, budget, *, chain
+    ):
+        plen = tokens.shape[1]
+        logits, kc, vc = prefill_to_chain(
+            self.cfg, params_c, tokens, ctx_c, page_size=self.page_size, chain=chain
+        )
+        kc = jnp.moveaxis(kc, 1, 0)
+        vc = jnp.moveaxis(vc, 1, 0)
+        row = jnp.zeros((self.max_pages_per_seq,), jnp.int32).at[:chain].set(pids)
+        cache = dict(
+            # advanced indices (chip, pids) around the layer slice put the
+            # chain axis first — kc/vc are moveaxis'd to match
+            k_pages=cache["k_pages"].at[chip, :, pids].set(kc.astype(cache["k_pages"].dtype)),
+            v_pages=cache["v_pages"].at[chip, :, pids].set(vc.astype(cache["v_pages"].dtype)),
+            block_tables=cache["block_tables"].at[chip, slot].set(row),
+            seq_lens=cache["seq_lens"].at[chip, slot].set(plen),
+        )
+        cur = cur.at[chip, slot].set(logits[0].astype(cur.dtype))
+        active = active.at[chip, slot].set(True)
+        remaining = remaining.at[chip, slot].set(budget)
+        return cache, cur, active, remaining
+
+    # -- the fleet serve loop ------------------------------------------------
+
+    def serve(
+        self,
+        streams: Sequence[Sequence[Request]],
+        *,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+    ) -> tuple[list[dict[int, RequestOutput]], ServeStats]:
+        """Serve one ragged request stream per chip to completion.
+
+        Returns (per-chip outputs-by-rid, fleet-level stats). Stats count
+        fused dispatches — the whole fleet advances per dispatch, so the
+        total is driven by the busiest chip, not the sum over chips."""
+        if len(streams) != self.num_chips:
+            raise ValueError(f"{self.num_chips} chips but {len(streams)} request streams")
+        stats = ServeStats(
+            num_slots=self.num_chips * self.num_slots, page_size=self.page_size
+        )
+        allocs = [PageAllocator(self.num_pages, self.page_size) for _ in range(self.num_chips)]
+        tables = [
+            _SlotTable(list(s), self.num_slots, allocs[c], self.max_pages_per_seq)
+            for c, s in enumerate(streams)
+        ]
+
+        N, S, V = self.num_chips, self.num_slots, self.cfg.vocab_size
+        dtype = jnp.dtype(self.cfg.dtype)
+        one = M.init_paged_cache(
+            self.cfg, self.num_pages, self.page_size, S, self.max_pages_per_seq
+        )
+        cache = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (N,) + x.shape).copy(), one
+        )
+        cur = jnp.zeros((N, S, V), dtype)
+        active = jnp.zeros((N, S), bool)
+        remaining = jnp.zeros((N, S), jnp.int32)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        keys = jax.random.split(key, N)  # one sample stream per chip
+        temp = jnp.float32(temperature)
+        eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
+
+        clock = 0
+        while not all(t.done for t in tables):
+            for c, table in enumerate(tables):
+                while True:
+                    adm = table.pop_admission(clock)
+                    if adm is None:
+                        break
+                    slot, r, pages = adm
+                    cache, cur, active, remaining = self._prefill_admit(
+                        self.params_list[c],
+                        jnp.asarray(r.tokens, jnp.int32)[None],
+                        self.ctxs[c], cache, cur, active, remaining,
+                        jnp.asarray(c, jnp.int32),
+                        jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(pages, jnp.int32),
+                        jnp.asarray(r.max_new_tokens, jnp.int32),
+                        chain=len(pages),
+                    )
+                    table.outputs_admitted[r.rid] = clock
+                    stats.prefill_dispatches += 1
+                    stats.admitted += 1
+            pages_in_use = sum(a.pages_in_use for a in allocs)
+            stats.peak_resident_kv_bytes = max(
+                stats.peak_resident_kv_bytes, pages_in_use * self._page_bytes
+            )
+            if not any(t.active.any() for t in tables):
+                arrivals = [t.next_arrival() for t in tables if t.next_arrival() is not None]
+                assert arrivals, "no active slots and no pending arrivals"
+                clock = max(clock + 1, min(arrivals))
+                continue
+
+            n_active = int(sum(t.active.sum() for t in tables))
+            args = (self.params, cur, cache, keys)
+            if self.ctx.ok is not None:
+                args += (self.ctx.ok,)
+            emitted, tok_lp, cur, cache, keys, active, remaining = self._step(
+                *args, temp, eos, active, remaining
+            )
+            clock += 1
+            stats.decode_dispatches += 1
+            stats.emitted_tokens += n_active
+            stats.active_slot_steps += n_active
+            stats.kv_byte_steps += pages_in_use * self._page_bytes
+            em = np.asarray(emitted)
+            lp = np.asarray(tok_lp)
+            ac = np.asarray(active)
+            for c, table in enumerate(tables):
+                table.record_step(em[c], lp[c], ac[c], clock, eos_id=eos_id)
+        # peak residency is exact from the per-round samples: pages only
+        # grow at admission (sampled) and shrink at retirement
+        return [t.outputs for t in tables], stats

@@ -2,7 +2,9 @@
 
 masked_matmul    — the paper's FAP operator fused into the MXU feed
 flash_attention  — blocked online-softmax attention (causal/SWA/GQA)
-decode_attention — int8-KV decode attention with in-VMEM dequant
+decode_attention — int8-KV decode attention with in-VMEM dequant, plus a
+                   paged variant whose scalar-prefetch block tables read
+                   straight off the serve-side page pool
 mamba_scan       — chunked selective scan with VMEM-resident state
 
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public

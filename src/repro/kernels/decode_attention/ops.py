@@ -11,9 +11,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to
-from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
+    paged_decode_attention_ref,
     dequantize_kv_ref,
     quantize_kv_ref,
 )
@@ -60,3 +64,48 @@ def decode_attention(
         interpret=interpret,
     )
     return o[:, :sq].reshape(b, hq, sq, d)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, Hq, 1, D)
+    k_pages_i8: jax.Array,  # (Hkv, P, page, D) int8 page pool
+    k_scale: jax.Array,  # (Hkv, P, page) f32
+    v_pages_i8: jax.Array,
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # (B, maxp) int32
+    seq_lens: jax.Array,  # (B,) int32
+    *,
+    scale: Optional[float] = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode attention over an int8 *paged* KV pool (continuous batching).
+
+    Each sequence attends over its own page chain at its own length — the
+    ragged analog of :func:`decode_attention`. On non-TPU backends falls
+    back to the gather + dequantize + attend reference (whose XLA lowering
+    materializes the dense per-sequence cache the kernel's scalar-prefetch
+    block-table indexing avoids)."""
+    b, hq, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged decode attention takes one query token, got sq={sq}")
+    if interpret is None:
+        if not is_tpu_backend():
+            return paged_decode_attention_ref(
+                q, k_pages_i8, k_scale, v_pages_i8, v_scale,
+                block_tables, seq_lens, scale=scale,
+            )
+        interpret = False
+    hkv = k_pages_i8.shape[0]
+    group = hq // hkv
+    gq = 8 * -(-group // 8)  # pad the query group to the TPU sublane minimum
+    # head-major grouping: q heads [h*group, (h+1)*group) share kv head h
+    qf = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    qf = pad_axes_to(qf, {1: gq})
+    tables = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.asarray(seq_lens, jnp.int32).reshape(b)
+
+    o = paged_decode_attention_pallas(
+        qf, k_pages_i8, k_scale, v_pages_i8, v_scale, tables, lens,
+        hkv=hkv, scale=scale, gq=gq, interpret=interpret,
+    )
+    return o[:, :group].reshape(b, hkv, group, d).reshape(b, hq, 1, d)

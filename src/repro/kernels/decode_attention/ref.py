@@ -21,6 +21,42 @@ def dequantize_kv_ref(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+def gather_pages_ref(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Gather page chains into dense per-sequence KV.
+
+    pages: (Hkv, P, page, D); block_tables: (B, maxp) int32 page ids.
+    Returns (B, Hkv, maxp*page, D) — each sequence's chain concatenated in
+    order (garbage past its valid length; callers mask with seq_lens)."""
+    hkv, _, page, d = pages.shape
+    b, maxp = block_tables.shape
+    g = jnp.take(pages, block_tables, axis=1)  # (Hkv, B, maxp, page, D)
+    return jnp.moveaxis(g, 0, 1).reshape(b, hkv, maxp * page, d)
+
+
+def paged_decode_attention_ref(
+    q, k_pages_i8, k_scale, v_pages_i8, v_scale, block_tables, seq_lens, *, scale=None
+):
+    """Paged oracle: gather chains, dequantize, per-sequence masked attention.
+
+    q: (B, Hq, 1, D); pools: (Hkv, P, page, D) int8 + (Hkv, P, page) f32
+    scales; block_tables: (B, maxp); seq_lens: (B,) valid tokens per seq."""
+    b, hq, sq, d = q.shape
+    hkv, _, page, _ = k_pages_i8.shape
+    maxp = block_tables.shape[1]
+    k = gather_pages_ref(dequantize_kv_ref(k_pages_i8, k_scale), block_tables)
+    v = gather_pages_ref(dequantize_kv_ref(v_pages_i8, v_scale), block_tables)
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) * (
+        scale if scale is not None else 1.0 / (d**0.5)
+    )
+    mask = jnp.arange(maxp * page)[None] < seq_lens[:, None]  # (B, skv)
+    s = jnp.where(mask[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
 def decode_attention_ref(
     q, k_i8, k_scale, v_i8, v_scale, *, kv_valid_len=None, scale=None
 ):

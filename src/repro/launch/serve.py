@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --fault-rate 0.1 --batch 4 --new-tokens 16
+
+``--continuous`` serves the same prompts as a request stream through the
+continuous-batching engine (paged KV cache, per-request budgets skewed
+around --new-tokens) instead of one static batch.
 """
 from __future__ import annotations
 
@@ -19,6 +23,9 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--fault-rate", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (paged KV, skewed budgets)")
+    ap.add_argument("--slots", type=int, default=2)
     args = ap.parse_args()
 
     import jax
@@ -40,10 +47,38 @@ def main() -> None:
         ctx = from_fault_map(fm)
         print(f"fault map rate={fm.fault_rate:.3f}")
 
-    engine = ServeEngine(cfg, params, ctx, max_len=args.max_len)
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )
+    if args.continuous:
+        import numpy as np
+
+        from repro.serve import ContinuousBatchingEngine, Request
+
+        budgets = [
+            max(1, args.new_tokens // (4 if i % 2 else 1)) for i in range(args.batch)
+        ]
+        reqs = [
+            Request(i, np.asarray(prompts[i]), max_new_tokens=budgets[i], arrival=i % 3)
+            for i in range(args.batch)
+        ]
+        eng = ContinuousBatchingEngine(cfg, params, ctx, num_slots=args.slots)
+        t0 = time.time()
+        outs, stats = eng.serve(reqs, temperature=args.temperature)
+        dt = time.time() - t0
+        print(
+            f"{stats.emitted_tokens} tokens over {args.batch} requests in "
+            f"{stats.decode_dispatches} dispatches / {dt:.2f}s "
+            f"({stats.emitted_tokens/dt:.1f} tok/s, "
+            f"slot util {stats.slot_utilization:.0%}, "
+            f"peak KV {stats.peak_resident_kv_bytes} B)"
+        )
+        for i in range(min(2, args.batch)):
+            o = outs[i]
+            print(f"req{i}: ttft={o.ttft} {o.tokens.tolist()}")
+        return
+
+    engine = ServeEngine(cfg, params, ctx, max_len=args.max_len)
     t0 = time.time()
     out = engine.generate(
         prompts, max_new_tokens=args.new_tokens, temperature=args.temperature

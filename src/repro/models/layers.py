@@ -80,7 +80,12 @@ def dense_attention(
     q: Array, k: Array, v: Array, *, causal: bool, window: Optional[int],
     q_offset, kv_valid_len=None, scale: Optional[float] = None,
 ) -> Array:
-    """Materializing attention; q_offset may be a traced scalar (decode)."""
+    """Materializing attention; q_offset may be a traced scalar (decode).
+
+    ``q_offset`` / ``kv_valid_len`` may also be per-sequence ``(B,)`` arrays
+    (the continuous-batching decode path, where every slot sits at its own
+    position in its own KV chain); the scalar path is left byte-identical.
+    """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
@@ -88,16 +93,31 @@ def dense_attention(
     qg = q.reshape(b, hkv, group, sq, d)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
     s *= scale
-    rows = jnp.arange(sq)[:, None] + q_offset
-    cols = jnp.arange(skv)[None, :]
-    mask = jnp.ones((sq, skv), dtype=bool)
-    if causal:
-        mask = mask & (cols <= rows)
-    if window is not None:
-        mask = mask & (cols > rows - window)
-    if kv_valid_len is not None:
-        mask = mask & (cols < kv_valid_len)
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    off = jnp.asarray(q_offset)
+    vld = None if kv_valid_len is None else jnp.asarray(kv_valid_len)
+    if off.ndim or (vld is not None and vld.ndim):
+        # per-sequence offsets/lengths: mask is (B, sq, skv)
+        rows = jnp.broadcast_to(off, (b,))[:, None, None] + jnp.arange(sq)[None, :, None]
+        cols = jnp.arange(skv)[None, None, :]
+        mask = jnp.ones((b, sq, skv), dtype=bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        if vld is not None:
+            mask = mask & (cols < jnp.broadcast_to(vld, (b,))[:, None, None])
+        s = jnp.where(mask[:, None, None], s, -1e30)
+    else:
+        rows = jnp.arange(sq)[:, None] + q_offset
+        cols = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), dtype=bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        if kv_valid_len is not None:
+            mask = mask & (cols < kv_valid_len)
+        s = jnp.where(mask[None, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return o.reshape(b, hq, sq, d).astype(q.dtype)
@@ -263,6 +283,24 @@ class KVCache(NamedTuple):
     index: Array  # scalar int32: absolute position of next token
 
 
+class PagedKVView(NamedTuple):
+    """One layer's slice of a paged KV cache (repro.serve.kvcache).
+
+    The pool holds ``P`` pages of ``page_size`` tokens each; slot ``b``'s
+    history is the page chain ``block_tables[b]`` truncated to
+    ``seq_lens[b]`` tokens. Page 0 is reserved as a scratch page: writes of
+    masked-out slots (``write_mask`` False — retired slots between
+    retirement and re-admission) are redirected there so they can never
+    corrupt pages the allocator has already handed to another slot.
+    """
+
+    k_pages: Array  # (P, Hkv, page_size, D)
+    v_pages: Array
+    block_tables: Array  # (S, max_pages) int32 page ids
+    seq_lens: Array  # (S,) int32 tokens already cached per slot
+    write_mask: Optional[Array]  # (S,) bool; None = every slot writes
+
+
 def attention_block(
     p: dict,
     x: Array,  # (B, S, d_model)
@@ -293,7 +331,33 @@ def attention_block(
     q = shard_activation(q, ("batch", "heads", "seq", None))
 
     new_cache = None
-    if cache is not None:
+    if isinstance(cache, PagedKVView):
+        # paged decode: scatter the new token into each slot's current page,
+        # gather the slot's page chain, attend with per-slot positions
+        if s != 1:
+            raise ValueError(f"paged decode is one token per step, got s={s}")
+        page = cache.k_pages.shape[2]
+        maxp = cache.block_tables.shape[1]
+        pos = cache.seq_lens  # (S,)
+        chain_ix = jnp.clip(pos // page, 0, maxp - 1)
+        page_ix = jnp.take_along_axis(cache.block_tables, chain_ix[:, None], axis=1)[:, 0]
+        if cache.write_mask is not None:
+            page_ix = jnp.where(cache.write_mask, page_ix, 0)  # page 0 = scratch
+        off = pos % page
+        k_pages = cache.k_pages.at[page_ix, :, off].set(k[:, :, 0].astype(cache.k_pages.dtype))
+        v_pages = cache.v_pages.at[page_ix, :, off].set(v[:, :, 0].astype(cache.v_pages.dtype))
+        kg = jnp.moveaxis(jnp.take(k_pages, cache.block_tables, axis=0), 2, 1)
+        vg = jnp.moveaxis(jnp.take(v_pages, cache.block_tables, axis=0), 2, 1)
+        kg = kg.reshape(b, hkv, maxp * page, hd)  # (S, Hkv, maxp*page, D)
+        vg = vg.reshape(b, hkv, maxp * page, hd)
+        o = dense_attention(
+            q, kg, vg, causal=True, window=cfg.sliding_window,
+            q_offset=pos, kv_valid_len=pos + 1, scale=None,
+        )
+        new_cache = PagedKVView(
+            k_pages, v_pages, cache.block_tables, cache.seq_lens, cache.write_mask
+        )
+    elif cache is not None:
         s_buf = cache.k.shape[2]
         window = cfg.sliding_window
         # rolling buffer for SWA; linear buffer otherwise

@@ -22,6 +22,7 @@ from repro.core.masking import FaultContext, fault_linear, healthy, mask_selecte
 from repro.launch.sharding import shard_activation
 from repro.models.layers import (
     KVCache,
+    PagedKVView,
     apply_norm,
     attention_block,
     mlp_block,
@@ -304,15 +305,20 @@ def _block(
         return x, (new_cache or None), aux
 
     # attention families: dense / moe / vlm / audio
+    paged = isinstance(cache, PagedKVView)
     kv_cache = None
-    if cache is not None:
+    if paged:
+        kv_cache = cache
+    elif cache is not None:
         kv_cache = KVCache(cache["k"], cache["v"], cache_len)
     a, kv_out = attention_block(
         lp["attn"], h, cfg, ctx,
         positions=positions, impl=attn_impl, cache=kv_cache, return_kv=build_cache,
     )
     x = x + a
-    if cache is not None:
+    if paged:
+        new_cache = dict(kp=kv_out.k_pages, vp=kv_out.v_pages)
+    elif cache is not None:
         new_cache = dict(k=kv_out.k, v=kv_out.v)
     elif build_cache:
         new_cache = dict(kv=kv_out)
@@ -574,9 +580,25 @@ def decode_step(
     *,
     moe_impl: str = "einsum",
     moe_cf: float = 1.25,
+    active: Optional[Array] = None,
 ) -> tuple[Array, dict]:
-    """One autoregressive step against the cache. Returns (logits, cache')."""
+    """One autoregressive step against the cache. Returns (logits, cache').
+
+    ``cache`` is either the dense cache from :func:`prefill`/:func:`init_cache`
+    or a paged cache (``repro.serve.kvcache.init_paged_cache``), detected by
+    its ``k_pages`` key. The paged path reads each slot's page chain with a
+    gather and supports per-slot positions — slot ``b`` sits at its own
+    ``seq_lens[b]`` — plus ``active`` masking: inactive slots neither write
+    KV (their token lands on the reserved scratch page) nor advance their
+    length. ``active`` is ignored on the dense path, whose single scalar
+    index always advances.
+    """
     ctx = ctx or healthy()
+    if "k_pages" in cache:
+        return _decode_step_paged(
+            params, tokens, cache, cfg, ctx,
+            moe_impl=moe_impl, moe_cf=moe_cf, active=active,
+        )
     b, s = tokens.shape
     index = cache["index"]
     positions = index + jnp.arange(s, dtype=jnp.int32)[None]
@@ -604,3 +626,80 @@ def decode_step(
     new_cache = dict(new_layer_cache)
     new_cache["index"] = index + s
     return logits, new_cache
+
+
+def init_paged_cache(
+    cfg, num_pages: int, page_size: int, num_slots: int, max_pages_per_seq: int
+) -> dict:
+    """Zero paged KV cache: a shared page pool + per-slot block tables.
+
+    Layout: ``k_pages``/``v_pages`` are ``(L, num_pages, Hkv, page_size, hd)``
+    pools (page 0 reserved as the scratch page — see
+    ``repro.serve.kvcache.PageAllocator``), ``block_tables`` is
+    ``(num_slots, max_pages_per_seq)`` int32 page ids and ``seq_lens`` is the
+    per-slot cached-token count. Attention-family models only: SSM/hybrid
+    state is O(1) per slot and needs no paging, and encoders have no decode.
+    """
+    if cfg.has_ssm:
+        raise ValueError(
+            f"paged KV cache supports attention families only; {cfg.family!r} "
+            "carries SSM state (which is O(1) per slot and needs no paging)"
+        )
+    if cfg.is_encoder:
+        raise ValueError("encoder-only arch has no decode path to page")
+    dtype = jnp.dtype(cfg.dtype)
+    L, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k_pages": jnp.zeros((L, num_pages, hkv, page_size, hd), dtype),
+        "v_pages": jnp.zeros((L, num_pages, hkv, page_size, hd), dtype),
+        "block_tables": jnp.zeros((num_slots, max_pages_per_seq), jnp.int32),
+        "seq_lens": jnp.zeros((num_slots,), jnp.int32),
+    }
+
+
+def _decode_step_paged(
+    params: dict,
+    tokens: Array,  # (S, 1) — one token per slot
+    cache: dict,
+    cfg,
+    ctx: FaultContext,
+    *,
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+    active: Optional[Array] = None,
+) -> tuple[Array, dict]:
+    """Gather-based paged decode: per-slot positions, shared page pool."""
+    if cfg.has_ssm:
+        raise ValueError(f"paged decode supports attention families only, not {cfg.family!r}")
+    b, s = tokens.shape
+    lens = cache["seq_lens"]
+    bt = cache["block_tables"]
+    positions = jnp.broadcast_to(lens[:, None] + jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard_activation(x, ("batch", "seq", "embed"))
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, (kp, vp) = xs
+        view = PagedKVView(kp, vp, bt, lens, active)
+        h, nc, a = _block(
+            lp, h, cfg, ctx,
+            positions=positions, attn_impl="dense", moe_impl=moe_impl,
+            moe_cf=moe_cf, cache=view,
+        )
+        return (h, aux + a), nc
+
+    (x, _aux), new_pages = jax.lax.scan(
+        body,
+        (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], (cache["k_pages"], cache["v_pages"])),
+    )
+    x = apply_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = unembed(cfg, params, x, ctx)
+    advanced = lens + s if active is None else jnp.where(active, lens + s, lens)
+    return logits, dict(
+        k_pages=new_pages["kp"],
+        v_pages=new_pages["vp"],
+        block_tables=bt,
+        seq_lens=advanced,
+    )

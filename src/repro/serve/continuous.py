@@ -1,0 +1,401 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The static engine (``repro.serve.engine.ServeEngine``) runs one rectangular
+prompt batch to the longest request's horizon: a request that finishes at
+token 5 burns a dispatch per token until the batch's longest request
+finishes, and every sequence owns a dense ``max_len`` KV buffer for the
+whole run. This module replaces that with the standard serving loop:
+
+* a **request queue** of :class:`Request`\\ s (own prompt, own
+  ``max_new_tokens``, own arrival step);
+* a **slot table** of ``num_slots`` decode lanes; requests admit into free
+  slots (prefill on arrival), retire on EOS or their own budget, and free
+  their pages immediately so a waiting request refills the slot mid-flight;
+* ONE fused jitted decode step for the whole slot table — the masked form
+  of ``make_sample_decode`` (per-slot ``active`` masking, per-slot
+  ``remaining`` budgets) over the paged cache from
+  ``models/model.py::decode_step``.
+
+Decode math per request is the same prefill + masked-attention math the
+static engine runs, so greedy outputs are pinned token-for-token against
+``ServeEngine`` on the same prompt with the same budget — including
+requests admitted mid-flight (tests/test_serve_continuous.py).
+
+Host/device split: sampling, masking and the paged read/write all live in
+the one jitted step; the host loop only moves tiny per-slot flags (emitted
+tokens, the active mask) to run admission/retirement between dispatches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import FaultContext, healthy
+from repro.models import model as M
+from repro.serve.engine import make_sample_decode
+from repro.serve.kvcache import (
+    DEFAULT_PAGE_SIZE,
+    PageAllocator,
+    chain_layout,
+    page_bytes,
+    pages_needed,
+)
+
+__all__ = [
+    "Request",
+    "RequestOutput",
+    "ServeStats",
+    "ContinuousBatchingEngine",
+]
+
+
+def prefill_to_chain(cfg, params, tokens, ctx, *, page_size: int, chain: int):
+    """Prefill one request and lay its KV out as a page chain.
+
+    Returns ``(logits (1, V), k_chain, v_chain)`` with the chains shaped
+    ``(L, chain, Hkv, page_size, hd)`` for a one-shot pool scatter. Shared
+    by the single-chip and fleet continuous engines.
+
+    For sliding-window models whose prompt exceeds the window, prefill's
+    cache is a ring buffer holding only the last ``window`` tokens: those
+    are un-permuted back to linear order and placed at chain positions
+    ``[plen - window, plen)`` — earlier positions stay zero, which is
+    exact because the paged read path window-masks them out of every
+    future query's softmax.
+    """
+    plen = tokens.shape[1]
+    logits, dense = M.prefill(params, {"tokens": tokens}, cfg, ctx, cache_len=plen)
+    win = cfg.sliding_window
+    k, v = dense["k"], dense["v"]
+    if win and plen > win:
+        inv = jnp.asarray((np.arange(win) + plen) % win)  # undo the ring permutation
+        pad = [(0, 0), (0, 0), (0, 0), (plen - win, 0), (0, 0)]
+        k = jnp.pad(jnp.take(k, inv, axis=3), pad)
+        v = jnp.pad(jnp.take(v, inv, axis=3), pad)
+    return logits, chain_layout(k, page_size, chain), chain_layout(v, page_size, chain)
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request in a stream.
+
+    ``arrival`` is the decode-dispatch index at (or after) which the request
+    may be admitted — 0 means it is waiting before serving starts."""
+
+    rid: int
+    tokens: np.ndarray  # (prompt_len,) int token ids
+    max_new_tokens: int
+    arrival: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "tokens", np.asarray(self.tokens))
+        if self.tokens.ndim != 1 or self.tokens.shape[0] < 1:
+            raise ValueError(f"request {self.rid}: prompt must be a non-empty 1-D array")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+
+@dataclass
+class RequestOutput:
+    rid: int
+    prompt: np.ndarray
+    tokens: np.ndarray  # (generated,) — includes the EOS token if hit
+    logprobs: np.ndarray
+    admitted_step: int  # dispatch index at admission (prefill time)
+    finished_step: int  # dispatch index after the final token
+    finish_reason: str  # "eos" | "length"
+
+    @property
+    def ttft(self) -> int:
+        """Decode dispatches from serve start until this request's first
+        token (its prefill emits no token; the next dispatch does)."""
+        return self.admitted_step + 1
+
+
+@dataclass
+class ServeStats:
+    decode_dispatches: int = 0
+    prefill_dispatches: int = 0
+    emitted_tokens: int = 0
+    admitted: int = 0
+    num_slots: int = 0
+    page_size: int = 0
+    active_slot_steps: int = 0  # sum over dispatches of active slots
+    peak_resident_kv_bytes: int = 0
+    kv_byte_steps: int = 0  # sum over dispatches of resident kv bytes
+
+    @property
+    def slot_utilization(self) -> float:
+        if not self.decode_dispatches:
+            return 0.0
+        return self.active_slot_steps / (self.decode_dispatches * self.num_slots)
+
+    def as_dict(self) -> dict:
+        return dict(
+            decode_dispatches=self.decode_dispatches,
+            prefill_dispatches=self.prefill_dispatches,
+            emitted_tokens=self.emitted_tokens,
+            admitted=self.admitted,
+            num_slots=self.num_slots,
+            page_size=self.page_size,
+            slot_utilization=self.slot_utilization,
+            peak_resident_kv_bytes=self.peak_resident_kv_bytes,
+            kv_byte_steps=self.kv_byte_steps,
+        )
+
+
+class _SlotTable:
+    """Host-side slot bookkeeping for one chip's continuous-batch state.
+
+    Owns the page allocator, the pending queue (arrival order, stable), the
+    per-slot request records and the accumulating outputs. The device-side
+    arrays live with the engine; this class only decides who sits where."""
+
+    def __init__(self, requests: Sequence[Request], num_slots: int, allocator: PageAllocator,
+                 max_pages_per_seq: int):
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError(f"duplicate request ids in stream: {sorted(rids)}")
+        self.pending: list[Request] = sorted(
+            requests, key=lambda r: (r.arrival, r.rid)
+        )
+        self.alloc = allocator
+        self.max_pages_per_seq = max_pages_per_seq
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
+        self.active = np.zeros(num_slots, bool)
+        self.outputs: dict[int, RequestOutput] = {}
+        self.outputs_admitted: dict[int, int] = {}  # rid -> admission clock
+        self._tok: dict[int, list] = {}
+        self._lp: dict[int, list] = {}
+        for r in self.pending:
+            need = pages_needed(len(r.tokens) + r.max_new_tokens, allocator.page_size)
+            if need > max_pages_per_seq:
+                raise ValueError(
+                    f"request {r.rid} needs {need} pages "
+                    f"(prompt {len(r.tokens)} + budget {r.max_new_tokens}) but "
+                    f"max_pages_per_seq={max_pages_per_seq}"
+                )
+
+    @property
+    def done(self) -> bool:
+        return not self.pending and not self.active.any()
+
+    def next_arrival(self) -> Optional[int]:
+        return self.pending[0].arrival if self.pending else None
+
+    def pop_admission(self, clock: int) -> Optional[tuple[int, Request, list[int]]]:
+        """Admit the next arrived request into a free slot, allocating its
+        full page chain. None when no slot/request/pages are available."""
+        if not self.pending or self.pending[0].arrival > clock:
+            return None
+        free = [s for s, r in enumerate(self.slots) if r is None]
+        if not free:
+            return None
+        r = self.pending[0]
+        need = pages_needed(len(r.tokens) + r.max_new_tokens, self.alloc.page_size)
+        if not self.alloc.can_alloc(need):
+            if not self.active.any():
+                raise MemoryError(
+                    f"request {r.rid} needs {need} pages but only "
+                    f"{self.alloc.free_pages} are free and no request is in "
+                    "flight to retire — grow num_pages"
+                )
+            return None  # wait for a retirement to free pages
+        self.pending.pop(0)
+        slot = free[0]
+        pages = self.alloc.alloc(need)
+        self.slots[slot] = r
+        self.slot_pages[slot] = pages
+        self.active[slot] = True
+        self._tok[r.rid] = []
+        self._lp[r.rid] = []
+        return slot, r, pages
+
+    def record_step(
+        self,
+        emitted: np.ndarray,
+        lps: np.ndarray,
+        new_active: np.ndarray,
+        clock: int,
+        eos_id: Optional[int] = None,
+    ) -> list[int]:
+        """Record one dispatch's per-slot emissions; retire newly-finished
+        slots (freeing their pages). Returns the retired rids."""
+        retired = []
+        for s, r in enumerate(self.slots):
+            if r is None or not self.active[s]:
+                continue
+            self._tok[r.rid].append(int(emitted[s]))
+            self._lp[r.rid].append(float(lps[s]))
+            if not new_active[s]:
+                toks = np.asarray(self._tok.pop(r.rid))
+                # the EOS check wins even on the last budgeted token — it is
+                # what actually cleared the slot's mask on the device
+                reason = (
+                    "eos"
+                    if eos_id is not None and toks.size and toks[-1] == eos_id
+                    else "length"
+                )
+                self.outputs[r.rid] = RequestOutput(
+                    rid=r.rid,
+                    prompt=np.asarray(r.tokens),
+                    tokens=toks,
+                    logprobs=np.asarray(self._lp.pop(r.rid)),
+                    admitted_step=self.outputs_admitted[r.rid],
+                    finished_step=clock,
+                    finish_reason=reason,
+                )
+                self.alloc.free(self.slot_pages[s])
+                self.slot_pages[s] = []
+                self.slots[s] = None
+                retired.append(r.rid)
+        self.active = np.array(new_active, bool) & np.array(
+            [r is not None for r in self.slots]
+        )
+        return retired
+
+
+class ContinuousBatchingEngine:
+    """Continuous batching on one chip: paged KV + slot table + one fused
+    masked decode step per token across all in-flight requests."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        ctx: Optional[FaultContext] = None,
+        *,
+        num_slots: int = 4,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        num_pages: int = 128,
+        max_pages_per_seq: Optional[int] = None,
+        pad_id: int = 0,
+    ):
+        if cfg.has_ssm:
+            raise ValueError(
+                f"continuous batching supports attention families only; "
+                f"{cfg.family!r} carries unpaged SSM state"
+            )
+        if cfg.is_encoder:
+            raise ValueError("encoder-only arch has no decode path")
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx or healthy()
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_pages_per_seq = max_pages_per_seq or (num_pages - 1)
+        self.pad_id = pad_id
+        self._page_bytes = page_bytes(cfg, page_size)
+        self._sample_decode = jax.jit(make_sample_decode(cfg, pad_id=pad_id))
+        self._prefill_admit = jax.jit(self._prefill_admit_fn, static_argnames=("chain",))
+
+    # -- jitted pieces ------------------------------------------------------
+
+    def _prefill_admit_fn(
+        self, params, tokens, ctx, cache, cur, active, remaining, slot, pids, budget, *, chain
+    ):
+        """Prefill one request and splice it into the slot table: scatter its
+        KV chain into the pool pages, write its block-table row, seed its
+        logits/budget — one dispatch per admission."""
+        plen = tokens.shape[1]
+        logits, kc, vc = prefill_to_chain(
+            self.cfg, params, tokens, ctx, page_size=self.page_size, chain=chain
+        )
+        row = jnp.zeros((self.max_pages_per_seq,), jnp.int32).at[:chain].set(pids)
+        cache = dict(
+            k_pages=cache["k_pages"].at[:, pids].set(kc.astype(cache["k_pages"].dtype)),
+            v_pages=cache["v_pages"].at[:, pids].set(vc.astype(cache["v_pages"].dtype)),
+            block_tables=cache["block_tables"].at[slot].set(row),
+            seq_lens=cache["seq_lens"].at[slot].set(plen),
+        )
+        cur = cur.at[slot].set(logits[0].astype(cur.dtype))
+        active = active.at[slot].set(True)
+        remaining = remaining.at[slot].set(budget)
+        return cache, cur, active, remaining
+
+    # -- the serve loop -----------------------------------------------------
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        *,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+    ) -> tuple[dict[int, RequestOutput], ServeStats]:
+        """Serve a request stream to completion. Returns (outputs by rid,
+        stats). Outputs include per-request TTFT and finish reason."""
+        if not requests:
+            return {}, ServeStats(num_slots=self.num_slots, page_size=self.page_size)
+        alloc = PageAllocator(self.num_pages, self.page_size)
+        table = _SlotTable(requests, self.num_slots, alloc, self.max_pages_per_seq)
+        stats = ServeStats(num_slots=self.num_slots, page_size=self.page_size)
+
+        V = self.cfg.vocab_size
+        dtype = jnp.dtype(self.cfg.dtype)
+        cache = M.init_paged_cache(
+            self.cfg, self.num_pages, self.page_size, self.num_slots,
+            self.max_pages_per_seq,
+        )
+        cur = jnp.zeros((self.num_slots, V), dtype)
+        active = jnp.zeros((self.num_slots,), bool)
+        remaining = jnp.zeros((self.num_slots,), jnp.int32)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        temp = jnp.float32(temperature)
+        eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
+
+        clock = 0  # decode-dispatch index
+        while not table.done:
+            # admissions: fill free slots with every arrived request we can
+            while True:
+                adm = table.pop_admission(clock)
+                if adm is None:
+                    break
+                slot, r, pages = adm
+                cache, cur, active, remaining = self._prefill_admit(
+                    self.params,
+                    jnp.asarray(r.tokens, jnp.int32)[None],
+                    self.ctx, cache, cur, active, remaining,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(pages, jnp.int32),
+                    jnp.asarray(r.max_new_tokens, jnp.int32),
+                    chain=len(pages),
+                )
+                table.outputs_admitted[r.rid] = clock
+                stats.prefill_dispatches += 1
+                stats.admitted += 1
+                stats.peak_resident_kv_bytes = max(
+                    stats.peak_resident_kv_bytes, alloc.pages_in_use * self._page_bytes
+                )
+            if not table.active.any():
+                # idle: jump the clock to the next arrival (no dispatches)
+                nxt = table.next_arrival()
+                assert nxt is not None and nxt > clock
+                clock = nxt
+                continue
+
+            n_active = int(table.active.sum())
+            emitted, tok_lp, cur, cache, key, active, remaining = self._sample_decode(
+                self.params, cur, cache, key, self.ctx, temp, active, eos, remaining
+            )
+            clock += 1
+            stats.decode_dispatches += 1
+            stats.emitted_tokens += n_active
+            stats.active_slot_steps += n_active
+            stats.kv_byte_steps += alloc.pages_in_use * self._page_bytes
+            table.record_step(
+                np.asarray(emitted), np.asarray(tok_lp), np.asarray(active), clock,
+                eos_id=eos_id,
+            )
+        stats.peak_resident_kv_bytes = max(
+            stats.peak_resident_kv_bytes, alloc.peak_pages * self._page_bytes
+        )
+        return table.outputs, stats

@@ -11,6 +11,13 @@ round-trip for each of them. Temperature is a traced scalar (one compile
 covers greedy and every temperature); greedy token choice is exactly
 ``argmax`` — independent of the sampling key — so temperature=0.0
 reproduces the unfused reference token-for-token.
+
+The same fused step powers every serving tier (see README.md here):
+``ServeEngine`` jits it, ``repro.fleet.serve.FleetServeEngine`` vmaps it
+over chips, and the continuous-batching engines (``repro.serve.continuous``
+and ``repro.fleet.serve.ShardedFleetServeEngine``) run its *masked* form —
+per-slot ``active`` masking over a paged cache — so finished slots emit pad
+tokens with logprob 0 and stop writing KV until the scheduler refills them.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.masking import FaultContext, healthy
 from repro.models import model as M
+from repro.serve.kvcache import DEFAULT_PAGE_SIZE, round_up_to_page
 
 
 @dataclass
@@ -31,7 +39,7 @@ class GenerateResult:
     logprobs: jax.Array  # (B, generated)
 
 
-def make_sample_decode(cfg):
+def make_sample_decode(cfg, *, pad_id: int = 0):
     """Build the fused sampling+decode step for one chip.
 
     ``(params, cur_logits, cache, key, ctx, temperature) ->
@@ -41,9 +49,20 @@ def make_sample_decode(cfg):
     directly (one dispatch per token); ``repro.fleet.serve.FleetServeEngine``
     vmaps it over N chips' (params, FaultContext) pairs first, so a whole
     fleet advances one token per dispatch.
+
+    With ``active`` (a per-slot bool mask) the step runs in *masked* form
+    and returns ``(emitted, token_logprob, next_logits, cache, key,
+    new_active, new_remaining)``: inactive slots emit ``pad_id`` with
+    logprob 0, a slot retires when it samples ``eos_id`` (scalar; pass -1
+    to disable) or exhausts its per-slot ``remaining`` budget, and the mask
+    is forwarded to ``decode_step`` so retired slots stop writing KV
+    (paged caches redirect their writes to the scratch page). ``cache`` may
+    be the dense cache or a paged one — ``decode_step`` dispatches on it.
     """
 
-    def sample_decode(p, cur, cache, key, ctx, temperature):
+    def sample_decode(
+        p, cur, cache, key, ctx, temperature, active=None, eos_id=None, remaining=None
+    ):
         lp = jax.nn.log_softmax(cur.astype(jnp.float32), axis=-1)
         key, sub = jax.random.split(key)
         # temperature is traced: guard the division so the (unused)
@@ -52,26 +71,78 @@ def make_sample_decode(cfg):
         sampled = jax.random.categorical(sub, lp / safe_t, axis=-1)
         nxt = jnp.where(temperature > 0, sampled, jnp.argmax(lp, axis=-1))
         tok_lp = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
-        step_logits, cache = M.decode_step(p, nxt[:, None], cache, cfg, ctx)
-        return nxt, tok_lp, step_logits[:, 0], cache, key
+        if active is None:
+            step_logits, cache = M.decode_step(p, nxt[:, None], cache, cfg, ctx)
+            return nxt, tok_lp, step_logits[:, 0], cache, key
+        emitted = jnp.where(active, nxt, jnp.asarray(pad_id, nxt.dtype))
+        tok_lp = jnp.where(active, tok_lp, 0.0)
+        new_active = active
+        if eos_id is not None:
+            new_active = new_active & (nxt != eos_id)
+        new_remaining = remaining
+        if remaining is not None:
+            new_remaining = remaining - active.astype(remaining.dtype)
+            new_active = new_active & (new_remaining > 0)
+        step_logits, cache = M.decode_step(
+            p, emitted[:, None], cache, cfg, ctx, active=new_active
+        )
+        return emitted, tok_lp, step_logits[:, 0], cache, key, new_active, new_remaining
 
     return sample_decode
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, ctx: Optional[FaultContext] = None, *, max_len: int = 4096):
+    """Static-batch serving: one rectangular prompt batch, N decode steps.
+
+    ``max_len`` is the KV capacity. ``max_len=None`` derives it per
+    ``generate`` call as ``prompt_len + max_new_tokens`` rounded up to
+    ``page_size`` — explicit capacity instead of a 4096-slot default.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        ctx: Optional[FaultContext] = None,
+        *,
+        max_len: Optional[int] = 4096,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        pad_id: int = 0,
+    ):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx or healthy()
         self.max_len = max_len
-        self._prefill = jax.jit(
-            lambda p, b, ctx: M.prefill(p, b, cfg, ctx, cache_len=max_len)
+        self.page_size = page_size
+        self.pad_id = pad_id
+        self._prefill_len = jax.jit(
+            lambda p, b, ctx, cache_len: M.prefill(p, b, cfg, ctx, cache_len=cache_len),
+            static_argnums=3,
         )
+        self._prefill = self._prefill_fixed_len
         self._decode = jax.jit(
             lambda p, t, c, ctx: M.decode_step(p, t, c, cfg, ctx)
         )
 
-        self._sample_decode = jax.jit(make_sample_decode(cfg))
+        self._sample_decode = jax.jit(make_sample_decode(cfg, pad_id=pad_id))
+
+    def _prefill_fixed_len(self, p, b, ctx):
+        """Unfused-protocol prefill at the engine's fixed capacity. With
+        ``max_len=None`` the capacity depends on the generation budget only
+        ``generate`` knows — call ``_prefill_len`` with it explicitly."""
+        if self.max_len is None:
+            raise ValueError(
+                "ServeEngine(max_len=None) derives KV capacity per generate "
+                "call; use _prefill_len(params, batch, ctx, cache_len) with "
+                "cache_len_for(prompt_len, max_new_tokens)"
+            )
+        return self._prefill_len(p, b, ctx, self.max_len)
+
+    def cache_len_for(self, prompt_len: int, max_new_tokens: int) -> int:
+        """KV capacity one generate call needs (page-size rounded)."""
+        if self.max_len is not None:
+            return self.max_len
+        return round_up_to_page(prompt_len + max_new_tokens, self.page_size)
 
     def generate(
         self,
@@ -80,19 +151,36 @@ class ServeEngine:
         max_new_tokens: int = 32,
         temperature: float = 0.0,
         key: Optional[jax.Array] = None,
+        eos_id: Optional[int] = None,
     ) -> GenerateResult:
-        logits, cache = self._prefill(self.params, {"tokens": prompts}, self.ctx)
+        cache_len = self.cache_len_for(prompts.shape[1], max_new_tokens)
+        logits, cache = self._prefill_len(
+            self.params, {"tokens": prompts}, self.ctx, cache_len
+        )
         toks = [prompts]
         lps = []
         cur = logits
         key = key if key is not None else jax.random.PRNGKey(0)
         temp = jnp.float32(temperature)
-        for _ in range(max_new_tokens):
-            nxt, tok_lp, cur, cache, key = self._sample_decode(
-                self.params, cur, cache, key, self.ctx, temp
-            )
-            lps.append(tok_lp)
-            toks.append(nxt[:, None])
+        if eos_id is None:
+            for _ in range(max_new_tokens):
+                nxt, tok_lp, cur, cache, key = self._sample_decode(
+                    self.params, cur, cache, key, self.ctx, temp
+                )
+                lps.append(tok_lp)
+                toks.append(nxt[:, None])
+        else:
+            # EOS masking: a finished sequence emits pad_id with logprob 0
+            # for the rest of the batch — the same per-slot semantics the
+            # continuous engine retires slots under.
+            active = jnp.ones((prompts.shape[0],), bool)
+            eos = jnp.asarray(eos_id, jnp.int32)
+            for _ in range(max_new_tokens):
+                nxt, tok_lp, cur, cache, key, active, _ = self._sample_decode(
+                    self.params, cur, cache, key, self.ctx, temp, active, eos
+                )
+                lps.append(tok_lp)
+                toks.append(nxt[:, None])
         return GenerateResult(
             tokens=jnp.concatenate(toks, axis=1), logprobs=jnp.stack(lps, axis=1)
         )
