@@ -69,6 +69,7 @@ def run_static(cfg, params, trace, plen, *, num_slots, page_size):
     from repro.serve import ServeEngine, dense_kv_bytes
 
     eng = ServeEngine(cfg, params, max_len=None, page_size=page_size)
+    compiled_fns = (eng._prefill_len, eng._sample_decode)
     outputs = {}
     dispatches = 0
     peak_bytes = 0
@@ -100,6 +101,9 @@ def run_static(cfg, params, trace, plen, *, num_slots, page_size):
         peak_resident_kv_bytes=peak_bytes,
         kv_byte_steps=byte_steps,
         mean_ttft_dispatches=float(np.mean(list(ttft.values()))),
+        # real compile count over the run: the jit caches of the engine's
+        # prefill + fused decode (the recompile census predicts these)
+        compiles=sum(f._cache_size() for f in compiled_fns),
         wall_s=wall,
         tokens_per_s=emitted / wall if wall else float("inf"),
     )
@@ -119,6 +123,7 @@ def run_continuous(cfg, params, trace, *, num_slots, page_size, num_pages):
     d = stats.as_dict()
     d.update(
         mean_ttft_dispatches=float(np.mean([o.ttft for o in outs.values()])),
+        compiles=eng._prefill_admit._cache_size() + eng._sample_decode._cache_size(),
         wall_s=wall,
         tokens_per_s=stats.emitted_tokens / wall if wall else float("inf"),
     )
@@ -187,6 +192,11 @@ def main() -> int:
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--chips", type=int, default=4)
     ap.add_argument("--out", type=str, default=None)
+    ap.add_argument(
+        "--no-analysis", action="store_true",
+        help="skip the static-analyzer section (donated-bytes fraction, "
+        "recompile census) of the report",
+    )
     args = ap.parse_args()
 
     import jax
@@ -230,6 +240,28 @@ def main() -> int:
         continuous=cont,
         checks=checks,
     )
+    if not args.no_analysis:
+        # static-analyzer metrics ahead of the ROADMAP-1 prefill-bucketing
+        # work: the donated-bytes fraction of every loop-carried serve/train
+        # operand and the recompile census the measured `compiles` should
+        # track (see src/repro/analysis/README.md)
+        from repro.analysis import analyze_stack
+
+        ana = analyze_stack("smollm-135m", passes=("donation", "recompile"))
+        don = ana.passes["donation"]
+        report["analysis"] = dict(
+            donated_fraction=don["donated_fraction"],
+            undonated_carried_bytes={
+                name: e["undonated_carried_bytes"]
+                for name, e in don["entries"].items()
+            },
+            trace_signatures={
+                name: e["signatures"]
+                for name, e in ana.passes["recompile"].items()
+            },
+            findings=len(ana.findings),
+        )
+        checks["all_carried_bytes_donated"] = don["donated_fraction"] == 1.0
     if args.fleet:
         report["fleet"] = run_fleet(
             cfg, params, trace, chips=args.chips,

@@ -1,0 +1,104 @@
+"""repro.analysis — a static program linter for the serve/train/fleet stack.
+
+Four passes certify the stack's jitted entry points without executing them
+(see README.md here and the pass modules' docstrings):
+
+* :mod:`~repro.analysis.donation` — DON001, loop-carried buffers that are
+  not donated, read off the optimized HLO ``input_output_alias`` table;
+* :mod:`~repro.analysis.recompile` — RCP001/RCP002, jit signatures that
+  grow unboundedly with request traffic;
+* :mod:`~repro.analysis.shardlint` — SHD001/SHD002, silent replication
+  fallbacks and engine-owned-axis violations in the sharding rules;
+* :mod:`~repro.analysis.kernelgeom` — KRN001–KRN004, Pallas launch
+  geometry (block divisibility, grid bounds, analytic VMEM, context leaks).
+
+``analyze_stack`` runs all four over the registry in
+:mod:`~repro.analysis.programs` and returns a :class:`Report`; the CLI is
+``python -m repro.launch.analyze`` with a committed ``baseline.json`` so CI
+fails on NEW findings only.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis.donation import ProgramSpec, donation_stats, lint_donation
+from repro.analysis.findings import Finding, Report, load_baseline
+from repro.analysis.kernelgeom import (
+    KernelLaunch,
+    check_launch,
+    lint_kernels,
+)
+from repro.analysis.programs import StackPrograms, build_stack
+from repro.analysis.recompile import (
+    EntryTraceModel,
+    TraceRequest,
+    lint_recompile,
+    synthetic_trace,
+)
+from repro.analysis.shardlint import FakeMesh, ShardingEntry, lint_sharding
+
+__all__ = [
+    "Finding",
+    "Report",
+    "load_baseline",
+    "ProgramSpec",
+    "lint_donation",
+    "donation_stats",
+    "EntryTraceModel",
+    "TraceRequest",
+    "synthetic_trace",
+    "lint_recompile",
+    "FakeMesh",
+    "ShardingEntry",
+    "lint_sharding",
+    "KernelLaunch",
+    "check_launch",
+    "lint_kernels",
+    "StackPrograms",
+    "build_stack",
+    "analyze_stack",
+    "default_baseline_path",
+]
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def analyze_stack(
+    arch: str = "smollm-135m",
+    *,
+    programs: StackPrograms = None,
+    min_bytes: int = 1 << 14,
+    shard_min_bytes: int = 1 << 20,
+    max_signatures: int = 8,
+    passes: tuple = ("donation", "recompile", "sharding", "kernels"),
+) -> Report:
+    """Run the linter passes over one arch's stack; returns a :class:`Report`.
+
+    ``min_bytes`` gates DON001 (per-leaf); ``shard_min_bytes`` gates SHD001.
+    ``passes`` selects a subset (the donation pass compiles the reduced
+    entry points and dominates runtime; the other three are instant).
+    """
+    progs = programs if programs is not None else build_stack(arch)
+    report = Report(meta=dict(arch=progs.arch, min_bytes=min_bytes))
+
+    if "donation" in passes:
+        f, stats = donation_stats(progs.donation_specs, min_bytes=min_bytes)
+        report.extend(f)
+        report.passes["donation"] = stats
+    if "recompile" in passes:
+        f, stats = lint_recompile(
+            progs.trace_models, synthetic_trace(), max_signatures=max_signatures
+        )
+        report.extend(f)
+        report.passes["recompile"] = stats
+    if "sharding" in passes:
+        f, stats = lint_sharding(progs.sharding_entries, min_bytes=shard_min_bytes)
+        report.extend(f)
+        report.passes["sharding"] = stats
+    if "kernels" in passes:
+        f, stats = lint_kernels(progs.kernel_launches)
+        report.extend(f)
+        report.passes["kernels"] = stats
+    return report

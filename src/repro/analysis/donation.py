@@ -1,0 +1,183 @@
+"""Donation/aliasing lint (DON001) over optimized-HLO alias metadata.
+
+A serve/train dispatch that carries big state (KV page pools, params,
+optimizer moments) back out as a result should *donate* the input buffer:
+without ``donate_argnums`` XLA must keep the operand alive while writing a
+fresh result buffer, so every token/step round-trips the full state through
+a copy that donation makes free. The lint takes a :class:`ProgramSpec`
+(declaring which top-level args the caller's loop actually re-binds each
+dispatch), lowers+compiles the entry point on abstract args, and joins
+three sources:
+
+* ``lowered.args_info`` — the jit-level pytree of per-leaf ``donated``
+  flags, which also gives every leaf's aval (bytes) and path label;
+* the ``input_output_alias`` table of the optimized HLO module header
+  (via ``repro.launch.hlo_cost.input_output_aliases``) — the backend's
+  ground truth for which entry parameters were actually aliased;
+* ``entry_parameters`` — the HLO-side byte check that flat leaf order
+  matches entry parameter numbering (jit may prune unused leaves;
+  on any mismatch the lint falls back to the jit-level flags).
+
+Each loop-carried leaf above ``min_bytes`` that is not aliased becomes a
+DON001 finding weighted by its per-dispatch byte size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.launch.hlo_cost import entry_parameters, input_output_aliases
+
+__all__ = ["ProgramSpec", "lint_donation", "donation_stats"]
+
+
+@dataclass
+class ProgramSpec:
+    """One jitted entry point plus the facts the linter can't infer.
+
+    ``carried`` are the *top-level positional* arg indices whose buffers the
+    host loop re-binds from the previous dispatch's outputs (and therefore
+    could donate); everything else (params reused across calls, static
+    scalars, the fault context) must NOT be donated and is not linted.
+    """
+
+    name: str
+    fn: Callable  # the jitted callable (has .lower)
+    args: tuple  # abstract args: pytrees of ShapeDtypeStruct leaves
+    carried: frozenset  # top-level positional indices that are loop-carried
+    kwargs: dict = field(default_factory=dict)  # static kwargs for lower()
+    arg_names: tuple = ()  # labels for top-level args (defaults to arg<i>)
+
+    def arg_label(self, i: int) -> str:
+        if i < len(self.arg_names):
+            return self.arg_names[i]
+        return f"arg{i}"
+
+
+def _leaf_bytes(aval) -> int:
+    return int(np.prod(aval.shape, dtype=np.int64)) * np.dtype(aval.dtype).itemsize
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def _flat_arg_leaves(args_info):
+    """Flatten ``lowered.args_info`` to [(top_idx, path, ArgInfo)] in the
+    entry-parameter flattening order (positional args then kwargs)."""
+    pos, kw = args_info
+    out = []
+    for i, sub in enumerate(pos):
+        for path, leaf in jax.tree_util.tree_flatten_with_path(sub)[0]:
+            out.append((i, _path_str(path), leaf))
+    for name in sorted(kw):  # static kwargs never appear here; traced kwargs do
+        for path, leaf in jax.tree_util.tree_flatten_with_path(kw[name])[0]:
+            out.append((-1, f"{name}/{_path_str(path)}", leaf))
+    return out
+
+
+def lint_donation(
+    spec: ProgramSpec, *, min_bytes: int = 1 << 16
+) -> tuple[list, dict]:
+    """Lint one entry point; returns (findings, stats).
+
+    Stats: per-dispatch carried bytes, how many of them are donated (by the
+    compiled module's own alias table when leaf order is verifiable, else by
+    the jit-level flags), and the donated fraction the serve benchmark
+    records.
+    """
+    lowered = spec.fn.lower(*spec.args, **spec.kwargs)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    leaves = _flat_arg_leaves(lowered.args_info)
+    params_tab = entry_parameters(hlo)
+    aliases = input_output_aliases(hlo)
+
+    # Trust HLO param numbering only when it matches the flat leaf count and
+    # per-leaf byte sizes — jit prunes unused leaves, which would shift it.
+    aliased_params = {a.param_number for a in aliases}
+    hlo_order_ok = len(params_tab) == len(leaves) and all(
+        params_tab[i].result_bytes == _leaf_bytes(leaf._aval)
+        for i, (_, _, leaf) in enumerate(leaves)
+        if i in params_tab
+    )
+
+    findings: list = []
+    carried_bytes = 0
+    donated_bytes = 0
+    total_bytes = 0
+    for flat_idx, (top, path, leaf) in enumerate(leaves):
+        nbytes = _leaf_bytes(leaf._aval)
+        total_bytes += nbytes
+        if top not in spec.carried:
+            continue
+        donated = (
+            flat_idx in aliased_params if hlo_order_ok else bool(leaf.donated)
+        )
+        carried_bytes += nbytes
+        if donated:
+            donated_bytes += nbytes
+            continue
+        if nbytes < min_bytes:
+            continue
+        label = spec.arg_label(top)
+        subject = f"{label}/{path}" if path else label
+        findings.append(
+            Finding(
+                code="DON001",
+                entry_point=spec.name,
+                subject=subject,
+                message=(
+                    f"loop-carried buffer {subject} ({nbytes/2**20:.2f} MiB "
+                    f"{np.dtype(leaf._aval.dtype).name}{list(leaf._aval.shape)}) "
+                    "round-trips undonated through every dispatch — add it to "
+                    "donate_argnums so XLA aliases it in place"
+                ),
+                severity="error",
+                bytes=nbytes,
+            )
+        )
+    stats = dict(
+        entry_params=len(params_tab),
+        arg_leaves=len(leaves),
+        hlo_alias_table=hlo_order_ok,
+        aliased_params=len(aliased_params),
+        total_arg_bytes=total_bytes,
+        carried_bytes=carried_bytes,
+        donated_bytes=donated_bytes,
+        undonated_carried_bytes=carried_bytes - donated_bytes,
+        donated_fraction=(donated_bytes / carried_bytes) if carried_bytes else 1.0,
+    )
+    return findings, stats
+
+
+def donation_stats(specs, *, min_bytes: int = 1 << 16) -> tuple[list, dict]:
+    """Run the donation lint over a registry of specs; aggregates stats."""
+    findings: list = []
+    per_entry: dict = {}
+    carried = donated = 0
+    for spec in specs:
+        f, s = lint_donation(spec, min_bytes=min_bytes)
+        findings.extend(f)
+        per_entry[spec.name] = s
+        carried += s["carried_bytes"]
+        donated += s["donated_bytes"]
+    agg = dict(
+        entries=per_entry,
+        carried_bytes=carried,
+        donated_bytes=donated,
+        donated_fraction=(donated / carried) if carried else 1.0,
+    )
+    return findings, agg

@@ -1,0 +1,140 @@
+"""Finding/report model for the static program linter.
+
+A :class:`Finding` is one violation with a *stable identity* — the
+``(code, entry_point, subject)`` triple — so a committed baseline can
+distinguish pre-existing violations (tolerated) from new ones (CI
+failure). Codes are grouped by pass:
+
+====== =====================================================================
+code   meaning
+====== =====================================================================
+DON001 loop-carried buffer round-trips undonated through every dispatch
+RCP001 trace-signature set unbounded in a request dimension (recompile
+       per distinct value — unbounded compile volume under real traffic)
+RCP002 distinct trace signatures on the given traffic trace exceed budget
+SHD001 array above the size threshold implicitly fell back to full
+       replication although a sharding rule for its logical axis exists
+SHD002 resolved sharding assigns a mesh axis owned by an outer engine
+       (e.g. the fleet layer's reserved "pop" axis)
+KRN001 Pallas block geometry invalid: block does not divide the padded dim
+       (or is incompatible with the fault-mask period)
+KRN002 analytic VMEM footprint of the kernel's resident blocks exceeds the
+       per-core budget
+KRN003 degenerate grid: an axis extent of zero / overflow, or a total
+       program count that is a launch-time scheduling hazard
+KRN004 batched FaultContext would reach a masked GEMM outside jax.vmap
+====== =====================================================================
+
+The report is plain JSON (``Report.as_dict``); the committed baseline is
+the sorted list of finding keys plus metadata (``Report.baseline_dict``).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+__all__ = ["Finding", "Report", "load_baseline", "SEVERITIES"]
+
+SEVERITIES = ("info", "warn", "error")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation. ``subject`` must be stable across runs (an arg label,
+    a param leaf path, a kernel axis name) — it is the baseline identity."""
+
+    code: str
+    entry_point: str
+    subject: str
+    message: str
+    severity: str = "error"
+    bytes: float = 0.0
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity {self.severity!r} not in {SEVERITIES}")
+
+    @property
+    def key(self) -> str:
+        return f"{self.code}:{self.entry_point}:{self.subject}"
+
+    def as_dict(self) -> dict:
+        return dict(
+            code=self.code,
+            entry_point=self.entry_point,
+            subject=self.subject,
+            message=self.message,
+            severity=self.severity,
+            bytes=float(self.bytes),
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(
+            code=d["code"],
+            entry_point=d["entry_point"],
+            subject=d["subject"],
+            message=d.get("message", ""),
+            severity=d.get("severity", "error"),
+            bytes=float(d.get("bytes", 0.0)),
+        )
+
+
+def _severity_rank(f: Finding) -> tuple:
+    return (-SEVERITIES.index(f.severity), -f.bytes, f.key)
+
+
+@dataclass
+class Report:
+    """All findings of one analyzer run plus per-pass summary stats."""
+
+    findings: list = field(default_factory=list)
+    passes: dict = field(default_factory=dict)  # pass name -> stats dict
+    meta: dict = field(default_factory=dict)
+
+    def extend(self, findings) -> None:
+        self.findings.extend(findings)
+
+    def sorted_findings(self) -> list:
+        return sorted(self.findings, key=_severity_rank)
+
+    def keys(self) -> set:
+        return {f.key for f in self.findings}
+
+    def new_vs_baseline(self, baseline_keys) -> list:
+        """Findings not covered by the baseline — what ``--check`` fails on."""
+        baseline_keys = set(baseline_keys)
+        return [f for f in self.sorted_findings() if f.key not in baseline_keys]
+
+    def resolved_vs_baseline(self, baseline_keys) -> list:
+        """Baselined keys that no longer fire (candidates for re-baselining)."""
+        return sorted(set(baseline_keys) - self.keys())
+
+    def as_dict(self) -> dict:
+        return dict(
+            meta=self.meta,
+            passes=self.passes,
+            findings=[f.as_dict() for f in self.sorted_findings()],
+        )
+
+    def baseline_dict(self) -> dict:
+        """The committable baseline: stable keys only (messages and byte
+        counts drift with configs; identities don't)."""
+        return dict(
+            meta={k: self.meta[k] for k in ("arch",) if k in self.meta},
+            keys=sorted(self.keys()),
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.as_dict(), f, indent=1)
+            f.write("\n")
+
+
+def load_baseline(path: str) -> set:
+    """Baseline keys from a committed baseline file (or a full report)."""
+    with open(path) as f:
+        d = json.load(f)
+    if "keys" in d:
+        return set(d["keys"])
+    return {Finding.from_dict(fd).key for fd in d.get("findings", ())}

@@ -1,0 +1,336 @@
+"""Pallas kernel geometry lint (KRN001–KRN004) — launch checks before launch.
+
+A Pallas call with bad geometry fails at Mosaic compile/launch time, i.e.
+the first time a traffic shape hits it in production. Every failure mode is
+a pure function of static geometry, so this pass checks it at lint time:
+
+* KRN001 — a grid axis' dim is not divisible by its block (the exact
+  ``grid_for`` failure), or a masked-matmul block is incompatible with the
+  fault-mask period (the exact ``_mask_axis_plan`` failure);
+* KRN002 — the analytic VMEM footprint of the launch's resident blocks
+  (``kernels/common.py::vmem_footprint``) exceeds ``VMEM_LIMIT_BYTES``;
+* KRN003 — a degenerate grid: non-positive or int32-overflowing axis;
+* KRN004 — a batched ``FaultContext`` would reach a masked GEMM outside
+  ``jax.vmap`` (the static form of ``core/masking.py``'s runtime guard,
+  via ``context_leak_reason`` — works on abstract contexts).
+
+The ``*_launch`` builders reproduce the geometry the ``ops.py`` wrappers
+compute for given logical shapes (same ``choose_block``/padding calls), so
+linting the shipped stack means building its launches and running
+:func:`check_launch` on each; golden tests hand-build broken launches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.core.masking import FaultContext, context_leak_reason
+from repro.kernels.common import (
+    MAX_GRID_AXIS,
+    VMEM_LIMIT_BYTES,
+    choose_block,
+    pad_to_multiple,
+    vmem_footprint,
+)
+from repro.kernels.masked_matmul.masked_matmul import _mask_axis_plan
+
+__all__ = [
+    "KernelLaunch",
+    "check_launch",
+    "masked_matmul_launch",
+    "flash_attention_launch",
+    "decode_attention_launch",
+    "mamba_scan_launch",
+    "lint_kernels",
+]
+
+_LANES = 128  # TPU lane width: the attention kernels' stats-scratch columns
+
+
+@dataclass(frozen=True)
+class KernelLaunch:
+    """Static description of one pallas_call: grid geometry + VMEM blocks.
+
+    ``dims``/``blocks`` are the gridded axes (post-padding dims, in grid
+    order); ``vmem_blocks`` is every VMEM-resident buffer of one program
+    instance as ``(shape, dtype)`` — in/out blocks plus scratch.
+    ``mask_blocks`` are ``(block, period)`` pairs for periodic-mask axes
+    (masked matmul); ``ctx`` is the FaultContext the launch would consume.
+    """
+
+    kernel: str
+    dims: tuple
+    blocks: tuple
+    vmem_blocks: tuple  # ((shape, dtype), ...)
+    mask_blocks: tuple = ()  # ((block, period), ...)
+    ctx: Optional[FaultContext] = None
+
+    @property
+    def grid(self) -> tuple:
+        return tuple(
+            d // b if b else 0 for d, b in zip(self.dims, self.blocks)
+        )
+
+
+def check_launch(launch: KernelLaunch) -> list:
+    """All geometry findings for one launch (empty list = launchable)."""
+    findings: list = []
+    name = launch.kernel
+    for axis, (d, b) in enumerate(zip(launch.dims, launch.blocks)):
+        if b <= 0 or d <= 0:
+            findings.append(
+                Finding(
+                    code="KRN003",
+                    entry_point=name,
+                    subject=f"axis{axis}",
+                    message=f"degenerate grid axis {axis}: dim {d}, block {b}",
+                )
+            )
+            continue
+        if d % b:
+            findings.append(
+                Finding(
+                    code="KRN001",
+                    entry_point=name,
+                    subject=f"axis{axis}",
+                    message=(
+                        f"grid axis {axis}: dim {d} not divisible by block {b} "
+                        "— pallas_call would read out of bounds / grid_for "
+                        "raises at launch"
+                    ),
+                )
+            )
+            continue
+        if d // b > MAX_GRID_AXIS:
+            findings.append(
+                Finding(
+                    code="KRN003",
+                    entry_point=name,
+                    subject=f"axis{axis}",
+                    message=f"grid axis {axis} extent {d // b} overflows int32",
+                )
+            )
+    for i, (b, period) in enumerate(launch.mask_blocks):
+        try:
+            _mask_axis_plan(int(b), int(period))
+        except ValueError as e:
+            findings.append(
+                Finding(
+                    code="KRN001",
+                    entry_point=name,
+                    subject=f"mask_axis{i}",
+                    message=f"mask-period incompatibility: {e}",
+                )
+            )
+    vmem = vmem_footprint(launch.vmem_blocks)
+    if vmem > VMEM_LIMIT_BYTES:
+        findings.append(
+            Finding(
+                code="KRN002",
+                entry_point=name,
+                subject="vmem",
+                message=(
+                    f"resident blocks need {vmem/2**20:.2f} MiB VMEM "
+                    f"(limit {VMEM_LIMIT_BYTES/2**20:.0f} MiB) — shrink blocks"
+                ),
+                bytes=vmem,
+            )
+        )
+    reason = context_leak_reason(launch.ctx)
+    if reason is not None:
+        findings.append(
+            Finding(
+                code="KRN004",
+                entry_point=name,
+                subject="ctx",
+                message=reason,
+            )
+        )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Launch builders — mirror the ops.py wrappers' geometry exactly
+# ---------------------------------------------------------------------------
+
+
+def masked_matmul_launch(
+    m: int,
+    k: int,
+    n: int,
+    mask_shape: tuple,
+    *,
+    bm: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    dtype: Any = jnp.float32,
+    ctx: Optional[FaultContext] = None,
+) -> KernelLaunch:
+    """Geometry of ``masked_matmul.ops.masked_matmul(x[(m,k)], w[(k,n)])``."""
+    r, c = mask_shape
+    bm_ = choose_block(m, bm)
+    bn_ = choose_block(n, bn, multiple_of=c)
+    bk_ = choose_block(k, bk, multiple_of=r)
+    mp, np_ = pad_to_multiple(m, bm_), pad_to_multiple(n, bn_)
+    kp = k if k % bk_ == 0 else pad_to_multiple(k, max(bk_, r))
+    mask_br = min(bk_, r)
+    mask_bc = min(bn_, c)
+    return KernelLaunch(
+        kernel="masked_matmul",
+        dims=(mp, np_, kp),
+        blocks=(bm_, bn_, bk_),
+        vmem_blocks=(
+            ((bm_, bk_), dtype),  # x block
+            ((bk_, bn_), dtype),  # w block
+            ((mask_br, mask_bc), jnp.float32),  # mask block
+            ((bm_, bn_), dtype),  # out block
+            ((bm_, bn_), jnp.float32),  # accumulator scratch
+        ),
+        mask_blocks=((bk_, r), (bn_, c)),
+        ctx=ctx,
+    )
+
+
+def flash_attention_launch(
+    batch: int,
+    hq: int,
+    hkv: int,
+    sq: int,
+    skv: int,
+    head_dim: int,
+    *,
+    bq: int = 128,
+    bkv: int = 128,
+    dtype: Any = jnp.float32,
+) -> KernelLaunch:
+    """Geometry of ``flash_attention.ops.flash_attention`` (B,H,S,D)."""
+    bq_ = min(bq, sq)
+    sq_p = pad_to_multiple(sq, max(bq_, 8))
+    bq_ = min(max(bq_, 8), sq_p)
+    bkv_ = min(bkv, skv)
+    skv_p = pad_to_multiple(skv, bkv_)
+    d = head_dim
+    return KernelLaunch(
+        kernel="flash_attention",
+        dims=(batch * hq, sq_p, skv_p),
+        blocks=(1, bq_, bkv_),
+        vmem_blocks=(
+            ((1, bq_, d), dtype),  # q block
+            ((1, bkv_, d), dtype),  # k block
+            ((1, bkv_, d), dtype),  # v block
+            ((1, bq_, d), dtype),  # out block
+            ((bq_, d), jnp.float32),  # o accumulator
+            ((bq_, _LANES), jnp.float32),  # running max
+            ((bq_, _LANES), jnp.float32),  # running sum
+        ),
+    )
+
+
+def decode_attention_launch(
+    batch: int,
+    hq: int,
+    hkv: int,
+    skv: int,
+    head_dim: int,
+    *,
+    bkv: int = 128,
+    paged: bool = False,
+    page_size: int = 0,
+) -> KernelLaunch:
+    """Geometry of ``decode_attention.ops.decode_attention`` (int8 KV) or
+    its paged variant (``paged=True`` with the pool's ``page_size``)."""
+    d = head_dim
+    group = hq // max(1, hkv)
+    if paged:
+        gq = 8 * -(-group // 8)
+        page = page_size
+        return KernelLaunch(
+            kernel="paged_decode_attention",
+            dims=(batch * hkv, gq, page),
+            blocks=(1, gq, page),
+            vmem_blocks=(
+                ((1, gq, d), jnp.float32),  # q block
+                ((1, 1, page, d), jnp.int8),  # k page
+                ((1, 1, page), jnp.float32),  # k scales
+                ((1, 1, page, d), jnp.int8),  # v page
+                ((1, 1, page), jnp.float32),  # v scales
+                ((1, gq, d), jnp.float32),  # out block
+                ((gq, d), jnp.float32),  # o accumulator
+                ((gq, _LANES), jnp.float32),  # running max
+                ((gq, _LANES), jnp.float32),  # running sum
+            ),
+        )
+    bq = 8  # TPU sublane minimum; decode q is 1 row padded
+    skv_p = pad_to_multiple(skv, min(bkv, skv))
+    bkv_ = min(bkv, skv_p)
+    return KernelLaunch(
+        kernel="decode_attention",
+        dims=(batch * hq, bq, skv_p),
+        blocks=(1, bq, bkv_),
+        vmem_blocks=(
+            ((1, bq, d), jnp.float32),  # q block
+            ((1, bkv_, d), jnp.int8),  # k block
+            ((1, bkv_), jnp.float32),  # k scales
+            ((1, bkv_, d), jnp.int8),  # v block
+            ((1, bkv_), jnp.float32),  # v scales
+            ((1, bq, d), jnp.float32),  # out block
+            ((bq, d), jnp.float32),  # o accumulator
+            ((bq, _LANES), jnp.float32),  # running max
+            ((bq, _LANES), jnp.float32),  # running sum
+        ),
+    )
+
+
+def mamba_scan_launch(
+    batch: int,
+    length: int,
+    dim: int,
+    state: int,
+    *,
+    bd: int = 256,
+    bl: int = 128,
+    dtype: Any = jnp.float32,
+) -> KernelLaunch:
+    """Geometry of ``mamba_scan.ops.selective_scan`` (B, L, D) + state N."""
+    bd_ = min(bd, dim)
+    bl_ = min(bl, length)
+    dim_p = pad_to_multiple(dim, bd_)
+    len_p = pad_to_multiple(length, bl_)
+    n = state
+    return KernelLaunch(
+        kernel="mamba_scan",
+        dims=(batch, dim_p, len_p),
+        blocks=(1, bd_, bl_),
+        vmem_blocks=(
+            ((1, bl_, bd_), dtype),  # u block
+            ((1, bl_, bd_), dtype),  # dt block
+            ((bd_, n), jnp.float32),  # A block
+            ((1, bl_, n), dtype),  # B block
+            ((1, bl_, n), dtype),  # C block
+            ((1, bd_), dtype),  # D skip
+            ((1, bl_, bd_), dtype),  # y out
+            ((1, bd_, n), jnp.float32),  # h_last out
+            ((bd_, n), jnp.float32),  # h scratch
+        ),
+    )
+
+
+def lint_kernels(launches: Sequence[KernelLaunch]) -> tuple[list, dict]:
+    """Run :func:`check_launch` over a stack's launches; (findings, stats)."""
+    findings: list = []
+    stats: dict = {}
+    for i, launch in enumerate(launches):
+        f = check_launch(launch)
+        findings.extend(f)
+        key = launch.kernel
+        if key in stats:
+            key = f"{key}[{i}]"
+        stats[key] = dict(
+            grid=list(launch.grid),
+            vmem_bytes=vmem_footprint(launch.vmem_blocks),
+            findings=len(f),
+        )
+    return findings, stats

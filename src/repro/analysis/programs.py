@@ -1,0 +1,347 @@
+"""The program registry: the stack's canonical entry points, declared once.
+
+``build_stack`` assembles everything the four analysis passes need for one
+architecture, with **no device execution**:
+
+* donation specs (:class:`~repro.analysis.donation.ProgramSpec`) for the
+  jitted serve/train/population entry points, on the *reduced* config —
+  lowering+compiling the reduced forms is cheap and donation/aliasing
+  structure is config-size-invariant (the same argnums are donated);
+* trace models (:class:`~repro.analysis.recompile.EntryTraceModel`) whose
+  signature functions mirror each entry's real jit boundary — tokens shapes,
+  static cache lengths, page-chain static argnums;
+* sharding entries on the **full** config (specs are free via eval_shape)
+  for the production train mesh and the fleet pop×model mesh;
+* kernel launches at production-representative shapes via the geometry
+  builders in :mod:`repro.analysis.kernelgeom`.
+
+The carried-argnum sets here are load-bearing: they encode which operands
+each host loop re-binds from the previous dispatch (see the donate_argnums
+comments in ``serve/engine.py`` / ``serve/continuous.py`` /
+``fleet/serve.py`` / ``train/step.py``). A refactor that adds a loop-carried
+operand without donating it turns into a DON001 the moment it lands here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.donation import ProgramSpec
+from repro.analysis.kernelgeom import (
+    KernelLaunch,
+    decode_attention_launch,
+    flash_attention_launch,
+    masked_matmul_launch,
+    mamba_scan_launch,
+)
+from repro.analysis.recompile import EntryTraceModel, TraceRequest
+from repro.analysis.shardlint import FakeMesh, ShardingEntry
+from repro.core.masking import FaultContext
+from repro.serve.kvcache import pages_needed
+
+__all__ = ["StackPrograms", "build_stack"]
+
+# Reduced-config lowering shapes (cheap to compile, structure-identical).
+_SERVE_BATCH = 2
+_SERVE_MAX_LEN = 64
+_SLOTS = 4
+_PAGE_SIZE = 8
+_NUM_PAGES = 32
+_MAX_PAGES_PER_SEQ = 8
+_ADMIT_PLEN = 12
+_ADMIT_CHAIN = 4
+_TRAIN_BATCH = 2
+_TRAIN_SEQ = 16
+_POP = 4
+
+
+@dataclass
+class StackPrograms:
+    """Everything the analyzer lints for one arch, grouped by pass."""
+
+    arch: str
+    donation_specs: list = field(default_factory=list)
+    trace_models: list = field(default_factory=list)
+    sharding_entries: list = field(default_factory=list)
+    kernel_launches: list = field(default_factory=list)
+
+
+def _abstract_ctx(cfg, *, mode: str = "fap") -> FaultContext:
+    """A traced-fault-context stand-in: abstract (R, C) mask + static mode."""
+    return FaultContext(
+        ok=jax.ShapeDtypeStruct((cfg.array_rows, cfg.array_cols), jnp.float32),
+        mode=mode,
+    )
+
+
+def _key_struct():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _scalar(dtype):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def _serve_specs(cfg_r) -> list:
+    from repro.launch.specs import cache_struct, param_struct
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(cfg_r, None, max_len=_SERVE_MAX_LEN)
+    params_s, _ = param_struct(cfg_r)
+    cache_s = cache_struct(cfg_r, _SERVE_BATCH, _SERVE_MAX_LEN)
+    cur_s = jax.ShapeDtypeStruct((_SERVE_BATCH, cfg_r.vocab_size), jnp.float32)
+    tok_s = jax.ShapeDtypeStruct((_SERVE_BATCH, 1), jnp.int32)
+    ctx = _abstract_ctx(cfg_r)
+    return [
+        ProgramSpec(
+            name="serve.sample_decode",
+            fn=eng._sample_decode,
+            args=(params_s, cur_s, cache_s, _key_struct(), ctx, _scalar(jnp.float32)),
+            carried=frozenset({1, 2, 3}),
+            arg_names=("params", "cur_logits", "cache", "key", "ctx", "temperature"),
+        ),
+        ProgramSpec(
+            name="serve.decode",
+            fn=eng._decode,
+            args=(params_s, tok_s, cache_s, ctx),
+            carried=frozenset({2}),
+            arg_names=("params", "tokens", "cache", "ctx"),
+        ),
+    ]
+
+
+def _continuous_specs(cfg_r) -> list:
+    from repro.launch.specs import param_struct
+    from repro.models import model as M
+    from repro.serve.continuous import ContinuousBatchingEngine
+
+    eng = ContinuousBatchingEngine(
+        cfg_r,
+        None,
+        num_slots=_SLOTS,
+        page_size=_PAGE_SIZE,
+        num_pages=_NUM_PAGES,
+        max_pages_per_seq=_MAX_PAGES_PER_SEQ,
+    )
+    params_s, _ = param_struct(cfg_r)
+    cache_s = jax.eval_shape(
+        lambda: M.init_paged_cache(
+            cfg_r, _NUM_PAGES, _PAGE_SIZE, _SLOTS, _MAX_PAGES_PER_SEQ
+        )
+    )
+    cur_s = jax.ShapeDtypeStruct((_SLOTS, cfg_r.vocab_size), jnp.float32)
+    active_s = jax.ShapeDtypeStruct((_SLOTS,), jnp.bool_)
+    remaining_s = jax.ShapeDtypeStruct((_SLOTS,), jnp.int32)
+    ctx = _abstract_ctx(cfg_r)
+    return [
+        ProgramSpec(
+            name="continuous.sample_decode",
+            fn=eng._sample_decode,
+            args=(
+                params_s, cur_s, cache_s, _key_struct(), ctx,
+                _scalar(jnp.float32), active_s, _scalar(jnp.int32), remaining_s,
+            ),
+            carried=frozenset({1, 2, 3, 6, 8}),
+            arg_names=(
+                "params", "cur_logits", "cache", "key", "ctx",
+                "temperature", "active", "eos_id", "remaining",
+            ),
+        ),
+        ProgramSpec(
+            name="continuous.prefill_admit",
+            fn=eng._prefill_admit,
+            args=(
+                params_s,
+                jax.ShapeDtypeStruct((1, _ADMIT_PLEN), jnp.int32),
+                ctx, cache_s, cur_s, active_s, remaining_s,
+                _scalar(jnp.int32),
+                jax.ShapeDtypeStruct((_ADMIT_CHAIN,), jnp.int32),
+                _scalar(jnp.int32),
+            ),
+            carried=frozenset({3, 4, 5, 6}),
+            kwargs=dict(chain=_ADMIT_CHAIN),
+            arg_names=(
+                "params", "tokens", "ctx", "cache", "cur_logits",
+                "active", "remaining", "slot", "page_ids", "budget",
+            ),
+        ),
+    ]
+
+
+def _train_specs(cfg_r) -> list:
+    from repro.launch.specs import opt_struct, param_struct
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import make_jit_train_step
+
+    params_s, _ = param_struct(cfg_r)
+    opt_s = opt_struct(cfg_r, params_s)
+    i32 = jnp.int32
+    batch_s = dict(
+        tokens=jax.ShapeDtypeStruct((_TRAIN_BATCH, _TRAIN_SEQ), i32),
+        labels=jax.ShapeDtypeStruct((_TRAIN_BATCH, _TRAIN_SEQ), i32),
+    )
+    step = make_jit_train_step(cfg_r, AdamWConfig(), remat="none")
+    return [
+        ProgramSpec(
+            name="train.step",
+            fn=step,
+            args=(params_s, opt_s, batch_s, _abstract_ctx(cfg_r)),
+            carried=frozenset({0, 1}),
+            arg_names=("params", "opt_state", "batch", "ctx"),
+        )
+    ]
+
+
+def _population_specs(cfg_r) -> list:
+    from repro.data.synthetic import TokenStream
+    from repro.launch.specs import param_struct
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.population import PopulationFATEngine
+    from repro.train.step import make_loss_fn
+
+    stream = TokenStream(cfg_r.vocab_size, _TRAIN_SEQ, _TRAIN_BATCH, seed=0)
+    engine = PopulationFATEngine(
+        loss_fn=make_loss_fn(cfg_r, remat="none"),
+        opt_cfg=AdamWConfig(),
+        eval_batches=[stream.batch_at(10_000_000)],
+        population_size=_POP,
+        eval_every=2,
+    )
+    params_s, _ = param_struct(cfg_r)
+    ok_pop = jax.ShapeDtypeStruct(
+        (_POP, cfg_r.array_rows, cfg_r.array_cols), jnp.float32
+    )
+    budgets = jax.ShapeDtypeStruct((_POP,), jnp.int32)
+    # the population sweep fans every member out from ONE params0 buffer the
+    # caller keeps for the next sweep — nothing is loop-carried, nothing may
+    # be donated; the lint asserts the carried set stays empty
+    fit = jax.jit(engine._fit_run(stream.batch_at, "fap"))
+    return [
+        ProgramSpec(
+            name="population.fit_run",
+            fn=fit,
+            args=(params_s, ok_pop, budgets),
+            carried=frozenset(),
+            arg_names=("params0", "ok_pop", "budgets"),
+        )
+    ]
+
+
+def _trace_models() -> list:
+    """Analytic jit signatures, mirroring the entries' real boundaries.
+
+    serve/continuous entries sweep only the request dimensions their jit
+    boundary can see (prompt_len, max_new_tokens) — ``batch`` is an engine
+    constant (slot count / rectangular batch), not per-request traffic.
+    train.step is launch-configured: its shapes never vary with a request.
+    """
+
+    def serve_prefill_sig(r: TraceRequest) -> tuple:
+        # ServeEngine._prefill_len: tokens (B, plen) + static cache_len;
+        # the shipped default max_len=4096 pins cache_len, the raw prompt
+        # length flows straight into the traced shape (ROADMAP item 1)
+        return ("serve.prefill", r.prompt_len, 4096)
+
+    def serve_decode_sig(r: TraceRequest) -> tuple:
+        # fused sample+decode: (B, V) logits + fixed-capacity cache
+        return ("serve.sample_decode", 4096)
+
+    def cont_decode_sig(r: TraceRequest) -> tuple:
+        # the slot-table dispatch: every shape is an engine constant
+        return ("continuous.sample_decode", _SLOTS, _NUM_PAGES, _PAGE_SIZE)
+
+    def cont_admit_sig(r: TraceRequest) -> tuple:
+        # _prefill_admit: tokens (1, plen) + static page-chain length
+        chain = pages_needed(r.prompt_len + r.max_new_tokens, _PAGE_SIZE)
+        return ("continuous.prefill_admit", r.prompt_len, chain)
+
+    def train_sig(r: TraceRequest) -> tuple:
+        return ("train.step", _TRAIN_BATCH, _TRAIN_SEQ)
+
+    serve_dims = ("prompt_len", "max_new_tokens")
+    return [
+        EntryTraceModel("serve.prefill", serve_prefill_sig, dims=serve_dims),
+        EntryTraceModel("serve.sample_decode", serve_decode_sig, dims=serve_dims),
+        EntryTraceModel("continuous.sample_decode", cont_decode_sig, dims=serve_dims),
+        EntryTraceModel("continuous.prefill_admit", cont_admit_sig, dims=serve_dims),
+        EntryTraceModel("train.step", train_sig, dims=("prompt_len", "batch")),
+    ]
+
+
+def _sharding_entries(cfg) -> list:
+    from repro.launch.sharding import make_rules_for_mesh
+    from repro.launch.specs import param_struct
+    from repro.models import model as M
+
+    params_s, _ = param_struct(cfg)
+    axes = M.param_specs(cfg)
+    train_mesh = FakeMesh.of(data=2, model=4)
+    fleet_mesh = FakeMesh.of(pop=4, model=2)
+    return [
+        ShardingEntry(
+            name="train.params",
+            mctx=make_rules_for_mesh(cfg, train_mesh),
+            axes=axes,
+            structs=params_s,
+        ),
+        ShardingEntry(
+            name="fleet.params",
+            mctx=make_rules_for_mesh(cfg, fleet_mesh, reserved_axes=("pop",)),
+            axes=axes,
+            structs=params_s,
+            engine_axes=("pop",),
+        ),
+    ]
+
+
+def _kernel_launches(cfg) -> list:
+    """Production-representative launches of every shipped Pallas kernel."""
+    dtype = jnp.dtype(cfg.dtype)
+    mask_shape = (cfg.array_rows, cfg.array_cols)
+    chip_ctx = FaultContext(
+        ok=jax.ShapeDtypeStruct(mask_shape, jnp.float32), mode="pallas"
+    )
+    hq = cfg.num_heads or 8
+    hkv = cfg.num_kv_heads or hq
+    hd = cfg.resolved_head_dim or 64
+    launches: list[KernelLaunch] = [
+        # the FAP masked GEMM at a full-seq MLP shape (tokens x d_model -> d_ff)
+        masked_matmul_launch(
+            2048, cfg.d_model, cfg.d_ff or 4 * cfg.d_model,
+            mask_shape, dtype=dtype, ctx=chip_ctx,
+        ),
+        flash_attention_launch(8, hq, hkv, 2048, 2048, hd, dtype=dtype),
+        decode_attention_launch(8, hq, hkv, 4096, hd),
+        decode_attention_launch(_SLOTS, hq, hkv, 4096, hd, paged=True,
+                                page_size=_PAGE_SIZE),
+        # the SSM scan ships in the kernel stack regardless of arch family
+        mamba_scan_launch(8, 2048, 1536, 16),
+    ]
+    return launches
+
+
+def build_stack(arch: str = "smollm-135m", cfg=None, cfg_reduced=None) -> StackPrograms:
+    """Assemble the lintable stack for ``arch``.
+
+    ``cfg``/``cfg_reduced`` override the registry lookup (tests inject tiny
+    configs); by default the sharding/kernel passes see the full config and
+    the lowering passes see ``reduce_config`` of it.
+    """
+    from repro.configs import get_arch, reduce_config
+
+    cfg = cfg if cfg is not None else get_arch(arch)
+    cfg_r = cfg_reduced if cfg_reduced is not None else reduce_config(cfg)
+
+    progs = StackPrograms(arch=arch)
+    progs.donation_specs = (
+        _serve_specs(cfg_r)
+        + _continuous_specs(cfg_r)
+        + _train_specs(cfg_r)
+        + _population_specs(cfg_r)
+    )
+    progs.trace_models = _trace_models()
+    progs.sharding_entries = _sharding_entries(cfg)
+    progs.kernel_launches = _kernel_launches(cfg)
+    return progs

@@ -1,0 +1,178 @@
+"""Sharding lint (SHD001/SHD002) — re-resolve the rule engine statically.
+
+``repro.launch.sharding.resolve_spec`` falls back to replication whenever no
+rule candidate divides a dim — deliberately (small models replicate their
+attention), but silently: a refactor that renames a logical axis or a mesh
+that stops dividing a dim degrades to full replication with zero signal.
+This pass re-runs the *same* resolution the launch layer uses, over the
+same logical-axes trees (``launch/specs.py``), on a duck-typed mesh — no
+devices needed — and flags:
+
+* SHD001 — a leaf above ``min_bytes`` resolved to **full replication** even
+  though some rule candidate for one of its logical axes exists on the mesh
+  (i.e. sharding was available and was lost to divisibility/axis-conflict,
+  not by design-with-no-rule);
+* SHD002 — a resolved spec assigns a mesh axis the entry declared as
+  **engine-owned** (the fleet layer's ``"pop"`` axis): member state inside a
+  shard_map lane must never re-shard over the axis the engine itself maps.
+
+``FakeMesh`` quacks like ``jax.sharding.Mesh`` for everything resolution
+touches (``.shape`` mapping), so fleet-mesh rule sets lint on a single-CPU
+host exactly as they resolve on an 8-device pod.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.launch.sharding import MeshContext, resolve_spec
+
+__all__ = ["FakeMesh", "ShardingEntry", "lint_sharding"]
+
+
+@dataclass(frozen=True)
+class FakeMesh:
+    """Duck-typed stand-in for ``jax.sharding.Mesh``: resolution only reads
+    ``mesh.shape`` (an axis-name -> size mapping)."""
+
+    axes: tuple  # ((name, size), ...)
+
+    @property
+    def shape(self) -> dict:
+        return dict(self.axes)
+
+    @classmethod
+    def of(cls, **sizes: int) -> "FakeMesh":
+        return cls(axes=tuple(sizes.items()))
+
+
+@dataclass
+class ShardingEntry:
+    """One program's sharding surface: logical axes + concrete shapes.
+
+    ``axes``/``structs`` are matching pytrees (axes leaves are tuples of
+    logical-axis names, structs leaves are ShapeDtypeStructs).
+    ``engine_axes`` are the mesh axes an outer engine owns for this entry —
+    any resolved spec touching them is SHD002.
+    """
+
+    name: str
+    mctx: MeshContext
+    axes: Any
+    structs: Any
+    engine_axes: tuple = ()
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def _leaf_bytes(struct) -> int:
+    return int(np.prod(struct.shape, dtype=np.int64)) * np.dtype(struct.dtype).itemsize
+
+
+def _spec_axes(spec) -> set:
+    out: set = set()
+    for part in spec:
+        if part is None:
+            continue
+        names = (part,) if isinstance(part, str) else part
+        out.update(names)
+    return out
+
+
+def _shardable_rule_exists(axes, mctx: MeshContext) -> Optional[str]:
+    """First logical axis with a live (present, unreserved, >1) candidate."""
+    for name in axes:
+        if name is None:
+            continue
+        for cand in mctx.rules.get(name, ()):
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in mctx.reserved_axes for a in names):
+                continue
+            if any(a not in mctx.mesh.shape for a in names):
+                continue
+            if mctx.axis_size(cand) > 1:
+                return name
+    return None
+
+
+def lint_sharding(
+    entries: Sequence[ShardingEntry], *, min_bytes: int = 1 << 20
+) -> tuple[list, dict]:
+    """Returns (findings, stats) over every entry's (axes, shape) leaves."""
+    findings: list = []
+    stats: dict = {}
+    for entry in entries:
+        flat_axes = jax.tree_util.tree_flatten_with_path(
+            entry.axes, is_leaf=_is_axes_leaf
+        )[0]
+        flat_structs = jax.tree_util.tree_leaves(entry.structs)
+        if len(flat_axes) != len(flat_structs):
+            raise ValueError(
+                f"{entry.name}: axes tree has {len(flat_axes)} leaves but "
+                f"structs tree has {len(flat_structs)}"
+            )
+        n_sharded = n_replicated = 0
+        replicated_bytes = 0
+        for (path, axes), struct in zip(flat_axes, flat_structs):
+            label = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+            ) or "value"
+            spec = resolve_spec(axes, struct.shape, entry.mctx)
+            assigned = _spec_axes(spec)
+            owned = assigned & set(entry.engine_axes)
+            if owned:
+                findings.append(
+                    Finding(
+                        code="SHD002",
+                        entry_point=entry.name,
+                        subject=label,
+                        message=(
+                            f"{label} resolved to spec {spec} using engine-owned "
+                            f"mesh axes {sorted(owned)} — the outer engine shards "
+                            "that axis itself (shard_map); pass it via "
+                            "reserved_axes so model rules skip it"
+                        ),
+                        severity="error",
+                        bytes=_leaf_bytes(struct),
+                    )
+                )
+            if assigned:
+                n_sharded += 1
+                continue
+            n_replicated += 1
+            nbytes = _leaf_bytes(struct)
+            replicated_bytes += nbytes
+            if nbytes < min_bytes:
+                continue
+            lost_axis = _shardable_rule_exists(axes, entry.mctx)
+            if lost_axis is None:
+                continue  # replication by design: no live rule for any axis
+            findings.append(
+                Finding(
+                    code="SHD001",
+                    entry_point=entry.name,
+                    subject=label,
+                    message=(
+                        f"{label} ({nbytes/2**20:.2f} MiB, logical axes "
+                        f"{tuple(a for a in axes if a)}) fell back to full "
+                        f"replication although axis {lost_axis!r} has a live "
+                        "rule on this mesh — a divisibility or axis-conflict "
+                        "regression, not replication by design"
+                    ),
+                    severity="warn",
+                    bytes=nbytes,
+                )
+            )
+        stats[entry.name] = dict(
+            leaves=len(flat_structs),
+            sharded=n_sharded,
+            replicated=n_replicated,
+            replicated_bytes=replicated_bytes,
+        )
+    return findings, stats

@@ -6,10 +6,9 @@ knows which (arch x shape) cells are runnable (sub-quadratic rules etc.).
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 # ---------------------------------------------------------------------------

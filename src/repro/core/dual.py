@@ -12,7 +12,7 @@ paper's proposal for multi-fault-type systems.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -9,10 +9,9 @@ artifacts fed to JAX programs as small constants.
 """
 from __future__ import annotations
 
-import json
 import os
-from dataclasses import dataclass, field
-from typing import Iterable, Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
 import numpy as np
 

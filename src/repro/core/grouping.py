@@ -4,12 +4,12 @@ fixed per-chip policy ([8]) and random pairwise merging (TRE-map [16]).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.faults import FaultMap, merge_fault_maps
+from repro.core.faults import FaultMap
 from repro.core.resilience import ResilienceTable
 
 __all__ = [

@@ -18,12 +18,10 @@ pallas  : same semantics, mask fused into the Pallas masked-matmul kernel
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.faults import FaultMap
 from repro.core.mapping import masked_weight
@@ -35,6 +33,7 @@ __all__ = [
     "healthy",
     "from_fault_map",
     "stack_contexts",
+    "context_leak_reason",
 ]
 
 
@@ -113,13 +112,32 @@ def stack_contexts(ctxs: Sequence[FaultContext]) -> FaultContext:
     return FaultContext(ok=jnp.stack(oks), mode=modes.pop())
 
 
-def _require_per_chip(ctx: FaultContext) -> None:
+def context_leak_reason(ctx: Optional[FaultContext]) -> Optional[str]:
+    """Static form of the batched-context guard: the reason a context would
+    be rejected by the masked-GEMM entry points, or None when it is safe.
+
+    Works on abstract contexts too (``ok`` may be a ShapeDtypeStruct), so
+    the program linter (``repro.analysis``) can check an entry point's
+    traced signature without executing it; the runtime guard
+    ``_require_per_chip`` raises on exactly the same condition.
+    """
+    if ctx is None or not ctx.active:
+        return None
     if ctx.population is not None:
-        raise ValueError(
-            "batched FaultContext reached a masked GEMM; consume it under "
-            "jax.vmap (e.g. via PopulationFATEngine) so each member sees an "
+        return (
+            f"batched FaultContext (population={ctx.population}) reached a "
+            "masked GEMM; consume it under jax.vmap so each member sees an "
             "(R, C) mask"
         )
+    if getattr(ctx.ok, "ndim", 2) != 2:
+        return f"FaultContext.ok must be (R, C) or (N, R, C), got ndim={ctx.ok.ndim}"
+    return None
+
+
+def _require_per_chip(ctx: FaultContext) -> None:
+    reason = context_leak_reason(ctx)
+    if reason is not None:
+        raise ValueError(reason + " (e.g. via PopulationFATEngine)")
 
 
 # ---------------------------------------------------------------------------

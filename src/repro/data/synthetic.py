@@ -15,7 +15,7 @@ straggler re-entry trivial (DESIGN.md S4).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

@@ -106,8 +106,12 @@ class FleetServeEngine:
                 in_axes=(0, None, ctx_ax),
             )
         )
+        # cur/cache/keys are re-bound from each dispatch's outputs in the
+        # generate loop — donated so the fleet's stacked KV caches alias in
+        # place (repro.analysis DON001); params/ctx are reused, not donated
         self._sample_decode = jax.jit(
-            jax.vmap(make_sample_decode(cfg), in_axes=(0, 0, 0, 0, ctx_ax, None))
+            jax.vmap(make_sample_decode(cfg), in_axes=(0, 0, 0, 0, ctx_ax, None)),
+            donate_argnums=(1, 2, 3),
         )
 
     def generate(
@@ -226,6 +230,7 @@ class ShardedFleetServeEngine:
 
             vmapped = jax.vmap(chip_step, in_axes=(0, 0, 0, 0, None, None, 0, 0))
             in_specs = (pa, pa, pa, pa, P(), P(), pa, pa)
+            donate = (1, 2, 3, 6, 7)  # cur, cache, keys, active, remaining
         else:
 
             def chip_step(p, cur, cache, key, ok, temp, eos, active, remaining):
@@ -236,6 +241,12 @@ class ShardedFleetServeEngine:
 
             vmapped = jax.vmap(chip_step, in_axes=(0, 0, 0, 0, 0, None, None, 0, 0))
             in_specs = (pa, pa, pa, pa, pa, P(), P(), pa, pa)
+            donate = (1, 2, 3, 7, 8)  # cur, cache, keys, active, remaining
+        # the serve loop re-binds every donated operand from the previous
+        # dispatch (host copies of emitted/active are taken synchronously
+        # before the next call), so the sharded page pools alias in place
+        # (repro.analysis DON001); params and the stacked ok masks are
+        # reused across dispatches and stay undonated
         self._step = jax.jit(
             shard_map(
                 vmapped,
@@ -243,10 +254,13 @@ class ShardedFleetServeEngine:
                 in_specs=in_specs,
                 out_specs=(pa,) * 7,
                 check_rep=False,
-            )
+            ),
+            donate_argnums=donate,
         )
         self._prefill_admit = jax.jit(
-            self._prefill_admit_fn, static_argnames=("chain",)
+            self._prefill_admit_fn,
+            static_argnames=("chain",),
+            donate_argnums=(3, 4, 5, 6),
         )
 
     # -- jitted admission: prefill one chip's request, splice into its slot --

@@ -42,6 +42,10 @@ __all__ = [
     "dtype_tol",
     "assert_close",
     "DEFAULT_TOLS",
+    "VMEM_LIMIT_BYTES",
+    "MAX_GRID_AXIS",
+    "block_bytes",
+    "vmem_footprint",
 ]
 
 
@@ -172,6 +176,39 @@ def grid_for(dims: Sequence[int], blocks: Sequence[int]) -> tuple[int, ...]:
             raise ValueError(f"dim {d} not divisible by block {b} ({dims} / {blocks})")
         out.append(d // b)
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Analytic VMEM accounting (shared by the kernel-geometry lint)
+# ---------------------------------------------------------------------------
+
+# Per-core VMEM on current TPU generations (v4/v5: 16 MiB usable scratch).
+# A kernel whose resident blocks exceed this fails at Mosaic compile/launch
+# time — the geometry lint (repro.analysis.kernelgeom) checks it statically.
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024
+
+# Mosaic grid extents are int32; practically, an axis near this bound means
+# a degenerate blocking choice long before it overflows.
+MAX_GRID_AXIS = 2**31 - 1
+
+
+def block_bytes(shape: Sequence[int], dtype: Any) -> int:
+    """Bytes of one VMEM-resident block of ``shape`` and ``dtype``."""
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * jnp.dtype(dtype).itemsize
+
+
+def vmem_footprint(blocks: Sequence[tuple[Sequence[int], Any]]) -> int:
+    """Analytic VMEM footprint of a kernel invocation: the sum of its
+    resident blocks — every ``in_specs``/``out_specs`` block plus scratch
+    shapes, each given as ``(shape, dtype)``. Double-buffering of DMA'd
+    operands is intentionally NOT modeled (it roughly doubles input-block
+    bytes); callers compare against a conservative fraction of
+    :data:`VMEM_LIMIT_BYTES` instead.
+    """
+    return sum(block_bytes(shape, dtype) for shape, dtype in blocks)
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,6 @@ outputs — the wrapper used to silently fall back to whole-axis blocks
 instead, losing the chunked VMEM schedule."""
 from __future__ import annotations
 
-import jax
 
 from repro.kernels.common import is_tpu_backend, pad_axes_to, pad_to_multiple
 from repro.kernels.mamba_scan.mamba_scan import selective_scan_pallas

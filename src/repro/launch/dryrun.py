@@ -31,7 +31,7 @@ def main() -> int:
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
-    from repro.configs import SHAPES, cell_skip_reason, get_arch, list_archs, valid_cells
+    from repro.configs import SHAPES, cell_skip_reason, get_arch, valid_cells
     from repro.launch.dryrun_lib import run_cell
 
     if args.all:

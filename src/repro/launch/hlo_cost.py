@@ -23,6 +23,7 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field
+from typing import Iterator, Optional
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -157,6 +158,150 @@ def _parse_instr(line: str):
     if not om:
         return None
     return name, rest[: om.start()], om.group(1)
+
+
+# ---------------------------------------------------------------------------
+# Public per-instruction API
+#
+# Downstream passes (repro.analysis) consume parsed instructions and the
+# module's input/output alias table through these instead of re-parsing the
+# HLO text with their own regexes.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Instruction:
+    """One parsed HLO instruction (top level of one computation)."""
+
+    computation: str
+    name: str
+    opcode: str
+    result_text: str  # raw result-type text, e.g. "f32[128,256]{1,0} "
+    operands: tuple[str, ...]
+    is_root: bool
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _bytes_of(self.result_text)
+
+
+@dataclass(frozen=True)
+class IOAlias:
+    """One entry of the module's ``input_output_alias`` table: output (tuple
+    index into the result) aliases entry parameter ``param_number`` — i.e.
+    that parameter's buffer was donated and XLA reuses it in place."""
+
+    output_index: tuple[int, ...]
+    param_number: int
+    kind: str = "may-alias"
+
+
+def _operands_of(line: str, opcode: str) -> tuple[str, ...]:
+    """Operand instruction names of one HLO line (shared by the cost walk)."""
+    tail = line.split(opcode + "(", 1)
+    if len(tail) < 2:
+        return ()
+    return tuple(_OPERAND_RE.findall(tail[1].split("), ")[0]))
+
+
+def iter_instructions(
+    hlo: str, computation: Optional[str] = None, entry_only: bool = False
+) -> Iterator[Instruction]:
+    """Yield every parsed instruction of ``hlo``.
+
+    ``computation`` restricts to one computation by name; ``entry_only``
+    restricts to the ENTRY computation. Lines that are not instructions
+    (headers, braces, metadata continuations) are skipped.
+    """
+    comps, entry = _parse_computations(hlo)
+    if entry_only:
+        if entry is None:
+            return
+        names = [entry]
+    elif computation is not None:
+        names = [computation] if computation in comps else []
+    else:
+        names = list(comps)
+    for comp in names:
+        for line in comps[comp]:
+            parsed = _parse_instr(line)
+            if not parsed:
+                continue
+            name, result_text, op = parsed
+            yield Instruction(
+                computation=comp,
+                name=name,
+                opcode=op,
+                result_text=result_text,
+                operands=_operands_of(line, op),
+                is_root=line.strip().startswith("ROOT"),
+                line=line,
+            )
+
+
+_ALIAS_TABLE_RE = re.compile(r"input_output_alias=\{(.*?)\}\s*(?:,|$)")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+)\s*,\s*\{[\d,\s]*\}\s*(?:,\s*([\w\-]+))?\)"
+)
+
+
+def input_output_aliases(hlo: str) -> list[IOAlias]:
+    """Parse the ``input_output_alias={...}`` table from the HloModule header.
+
+    Returns one :class:`IOAlias` per aliased (donated) entry parameter; an
+    empty list when the program donates nothing. The table only appears in
+    *optimized* HLO (``compiled.as_text()``), not in pre-compile StableHLO.
+    """
+    out: list[IOAlias] = []
+    for line in hlo.splitlines():
+        if not line.startswith("HloModule"):
+            continue
+        # the table's inner braces nest one level: grab everything between
+        # 'input_output_alias={' and the matching close brace
+        start = line.find("input_output_alias={")
+        if start < 0:
+            return []
+        depth = 0
+        body = []
+        for ch in line[start + len("input_output_alias=") :]:
+            if ch == "{":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            body.append(ch)
+        for m in _ALIAS_ENTRY_RE.finditer("".join(body)):
+            idx = tuple(int(x) for x in m.group(1).split(",") if x.strip())
+            out.append(
+                IOAlias(
+                    output_index=idx,
+                    param_number=int(m.group(2)),
+                    kind=m.group(3) or "must-alias",
+                )
+            )
+        break
+    return out
+
+
+def entry_parameters(hlo: str) -> dict[int, Instruction]:
+    """ENTRY computation parameters by parameter number.
+
+    ``entry_parameters(hlo)[n].result_bytes`` is the byte size of entry
+    parameter ``n`` — the donation lint joins this against
+    :func:`input_output_aliases` to weigh undonated buffers.
+    """
+    out: dict[int, Instruction] = {}
+    for instr in iter_instructions(hlo, entry_only=True):
+        if instr.opcode != "parameter":
+            continue
+        m = re.search(r"parameter\((\d+)\)", instr.line)
+        if m:
+            out[int(m.group(1))] = instr
+    return out
 
 
 def analyze_hlo(hlo: str, n_devices_default: int = 1) -> Cost:
@@ -307,10 +452,7 @@ def analyze_hlo(hlo: str, n_devices_default: int = 1) -> Cost:
             if base_op in _FREE_OPS:
                 continue
             # ---- operand byte lookup ----------------------------------
-            paren = line.split(op + "(", 1)
-            operand_text = paren[1] if len(paren) > 1 else ""
-            operand_text = operand_text.split("), ")[0]
-            operand_names = _OPERAND_RE.findall(operand_text)
+            operand_names = _operands_of(line, op)
             op_bytes = sum(_bytes_of(tab.get(o, "")) for o in operand_names)
             out_bytes = _bytes_of(result_text)
             if base_op == "dynamic-update-slice":

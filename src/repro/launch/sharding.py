@@ -23,7 +23,6 @@ model rules own is documented in ``src/repro/fleet/README.md``.
 from __future__ import annotations
 
 import contextvars
-import math
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union

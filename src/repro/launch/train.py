@@ -39,7 +39,7 @@ def main() -> None:
     from repro.models import model as M
     from repro.train.loop import LoopConfig, run_training
     from repro.train.optimizer import AdamWConfig, adamw_init, cosine_schedule
-    from repro.train.step import make_eval_step, make_train_step
+    from repro.train.step import make_eval_step, make_jit_train_step
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -52,9 +52,12 @@ def main() -> None:
     ocfg = AdamWConfig(
         learning_rate=cosine_schedule(args.lr, warmup=20, total=args.steps)
     )
-    train_step = jax.jit(
-        make_train_step(cfg, ocfg, remat="none", microbatches=args.microbatches,
-                        moe_impl=args.moe_impl)
+    # donating (params, opt_state) — safe here because the loop re-binds
+    # both from each step's outputs and checkpointing snapshots to host
+    # synchronously before the next dispatch
+    train_step = make_jit_train_step(
+        cfg, ocfg, remat="none", microbatches=args.microbatches,
+        moe_impl=args.moe_impl,
     )
     eval_step = jax.jit(make_eval_step(cfg, remat="none"))
     opt = adamw_init(params, ocfg)

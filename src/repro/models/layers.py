@@ -13,8 +13,7 @@ Attention has three interchangeable implementations:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,7 @@ systolic mapping places on faulty PEs.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ from repro.models.layers import (
     rms_norm,
 )
 from repro.models.moe import moe_block
-from repro.models.ssm import SSMCache, init_ssm_cache, ssm_block
+from repro.models.ssm import SSMCache, ssm_block
 
 Array = jax.Array
 

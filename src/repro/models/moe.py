@@ -13,7 +13,6 @@ over 'model' (tensor parallelism inside experts — mixtral's 8).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

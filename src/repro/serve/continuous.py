@@ -294,8 +294,19 @@ class ContinuousBatchingEngine:
         self.max_pages_per_seq = max_pages_per_seq or (num_pages - 1)
         self.pad_id = pad_id
         self._page_bytes = page_bytes(cfg, page_size)
-        self._sample_decode = jax.jit(make_sample_decode(cfg, pad_id=pad_id))
-        self._prefill_admit = jax.jit(self._prefill_admit_fn, static_argnames=("chain",))
+        # every loop-carried operand (cur logits, paged cache, key, active
+        # mask, remaining budgets) is re-bound from the previous dispatch's
+        # outputs — donate them all so the page pool never round-trips
+        # through a copy (repro.analysis DON001); params/ctx/eos are reused
+        # across dispatches and must stay undonated
+        self._sample_decode = jax.jit(
+            make_sample_decode(cfg, pad_id=pad_id), donate_argnums=(1, 2, 3, 6, 8)
+        )
+        self._prefill_admit = jax.jit(
+            self._prefill_admit_fn,
+            static_argnames=("chain",),
+            donate_argnums=(3, 4, 5, 6),
+        )
 
     # -- jitted pieces ------------------------------------------------------
 

@@ -22,7 +22,6 @@ tokens with logprob 0 and stop writing KV until the scheduler refills them.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional
 
 import jax
@@ -120,11 +119,17 @@ class ServeEngine:
             static_argnums=3,
         )
         self._prefill = self._prefill_fixed_len
+        # the generate loop re-binds cache/cur/key from each dispatch's
+        # outputs, so those operands are donated: XLA aliases the KV cache
+        # in place instead of copying it every token (repro.analysis DON001)
         self._decode = jax.jit(
-            lambda p, t, c, ctx: M.decode_step(p, t, c, cfg, ctx)
+            lambda p, t, c, ctx: M.decode_step(p, t, c, cfg, ctx),
+            donate_argnums=(2,),
         )
 
-        self._sample_decode = jax.jit(make_sample_decode(cfg, pad_id=pad_id))
+        self._sample_decode = jax.jit(
+            make_sample_decode(cfg, pad_id=pad_id), donate_argnums=(1, 2, 3)
+        )
 
     def _prefill_fixed_len(self, p, b, ctx):
         """Unfused-protocol prefill at the engine's fixed capacity. With

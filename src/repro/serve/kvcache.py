@@ -25,7 +25,7 @@ table) feeding per-slot masked dense attention — wired into
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

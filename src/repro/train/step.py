@@ -6,13 +6,12 @@ gradient-compression knob (halves accumulator memory and the bytes moved
 by the cross-replica reduction)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.masking import FaultContext, healthy
+from repro.core.masking import FaultContext
 from repro.models import model as M
 from repro.train.optimizer import AdamWConfig, adamw_update
 
@@ -94,6 +93,18 @@ def make_train_step(
         return params, opt_state, metrics
 
     return train_step
+
+
+def make_jit_train_step(cfg, opt_cfg: AdamWConfig, **kw) -> Callable:
+    """The canonical jitted train step: ``make_train_step`` under ``jax.jit``
+    with the loop-carried ``(params, opt_state)`` operands donated, so the
+    training loop's master weights and optimizer moments alias in place
+    instead of round-tripping through a copy every step. This is the form
+    the launcher runs and ``repro.analysis`` lints (DON001); callers that
+    re-use a params buffer across calls (e.g. population sweeps fanning out
+    from one ``params0``) must jit ``make_train_step`` themselves without
+    donation."""
+    return jax.jit(make_train_step(cfg, opt_cfg, **kw), donate_argnums=(0, 1))
 
 
 def make_eval_step(cfg, **kw) -> Callable:

@@ -1,8 +1,14 @@
 """Regression tests for the loop-aware HLO cost model that feeds the
-roofline analysis (EXPERIMENTS.md §Roofline)."""
+roofline analysis (EXPERIMENTS.md §Roofline), plus the per-instruction /
+alias-table API the donation lint (repro.analysis) consumes."""
 import numpy as np
 
-from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.hlo_cost import (
+    analyze_hlo,
+    entry_parameters,
+    input_output_aliases,
+    iter_instructions,
+)
 
 # A hand-written post-SPMD-style HLO module:
 #   body: one dot (M=8,K=16,N=32 f32) + an all-gather (out 4096 B, groups of 4)
@@ -65,6 +71,60 @@ def test_bytes_include_dot_operands_and_result():
     # all-gather adds local read+write of the gathered buffer (2*1024)
     per_trip = (8 * 16 + 16 * 32 + 8 * 32) * 4 + 2 * 1024
     assert cost.bytes >= per_trip * 5
+
+
+def test_iter_instructions_yields_parsed_entry():
+    instrs = list(iter_instructions(_HLO, entry_only=True))
+    by_name = {i.name: i for i in instrs}
+    assert by_name["x"].opcode == "parameter"
+    assert by_name["x"].result_bytes == 8 * 16 * 4
+    assert by_name["while.1"].opcode == "while"
+    assert by_name["ar"].is_root and by_name["ar"].opcode == "all-reduce"
+    assert by_name["ar"].operands == ("g",)
+    # computation-scoped iteration sees the body's dot but not the entry
+    body = list(iter_instructions(_HLO, computation="body.1"))
+    assert any(i.opcode == "dot" for i in body)
+    assert not any(i.name == "while.1" for i in body)
+
+
+def test_entry_parameters_by_number():
+    params = entry_parameters(_HLO)
+    assert sorted(params) == [0, 1, 2]
+    assert params[2].result_bytes == 100 * 4
+
+
+def test_input_output_alias_header_parse():
+    hlo = (
+        "HloModule jit_f, input_output_alias={ {0}: (1, {}, may-alias), "
+        "{1}: (3, {}, must-alias) }, entry_computation_layout={(f32[8])->f32[8]}\n"
+        "ENTRY %main (p0: f32[8]) -> f32[8] {\n"
+        "  ROOT %p0 = f32[8]{0} parameter(0)\n"
+        "}\n"
+    )
+    aliases = input_output_aliases(hlo)
+    assert [(a.output_index, a.param_number, a.kind) for a in aliases] == [
+        ((0,), 1, "may-alias"),
+        ((1,), 3, "must-alias"),
+    ]
+    assert input_output_aliases(_HLO) == []  # no table -> nothing donated
+
+
+def test_alias_table_from_real_compiled_module():
+    """End to end on a real jit: donation shows up in the optimized HLO and
+    the donated parameter's byte size matches entry_parameters."""
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(lambda x, y: (x + y, y * 2.0), donate_argnums=(0,))
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    hlo = fn.lower(s, s).compile().as_text()
+    aliases = input_output_aliases(hlo)
+    assert {a.param_number for a in aliases} == {0}
+    params = entry_parameters(hlo)
+    assert params[0].result_bytes == 64 * 64 * 4
+
+    undonated = jax.jit(lambda x, y: (x + y, y * 2.0))
+    assert input_output_aliases(undonated.lower(s, s).compile().as_text()) == []
 
 
 def test_real_cell_attribution_smollm():

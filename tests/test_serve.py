@@ -3,7 +3,6 @@ FAP mitigation quality (the [12] baseline comparison)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch, reduce_config
 from repro.core import (
@@ -15,7 +14,7 @@ from repro.core import (
     random_fault_map,
 )
 from repro.models import model as M
-from repro.models.classifier import classifier_loss, init_classifier
+from repro.models.classifier import classifier_loss
 from repro.serve.engine import ServeEngine
 from repro.train.fat_trainer import ClassifierFATTrainer
 

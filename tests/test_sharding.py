@@ -17,7 +17,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs import get_arch
 from repro.launch.policy import launch_policy
 from repro.configs.base import SHAPES
-from repro.launch.sharding import MeshContext, make_rules_for_mesh, resolve_spec
+from repro.launch.sharding import make_rules_for_mesh, resolve_spec
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

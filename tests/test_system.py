@@ -1,7 +1,6 @@
 """End-to-end system tests: the full eFAT pipeline (Steps 1-4) over a small
 fleet, exercising resilience measurement, Algo-2 grouping, consolidated FAT
 and per-chip deployment evaluation — the paper's Fig. 7 flow."""
-import numpy as np
 import pytest
 
 from repro.configs import get_arch
