@@ -20,20 +20,37 @@ host devices via XLA_FLAGS, as the CI serve job does), re-verifying that
 per-chip outputs match per-chip continuous engines and that fused fleet
 dispatches stay at busiest-chip scale rather than fleet-sum scale.
 
+``--heavy-traffic`` adds the production-shaped admission benchmark: a
+Poisson-arrival, Zipfian-prompt-length request stream served twice through
+the continuous engine — once UNBUCKETED (exact-length prefill: one compiled
+program per distinct prompt length, the `RCP001` hazard) and once through
+the bucketed/packed/chunked planner with AOT warmup. Both runs share one
+BOUNDED page pool (admission backpressure via ``PageAllocator.can_alloc``
+— queue-wait is reported alongside TTFT). The run FAILS unless the
+bucketed run's greedy tokens match the unbucketed run's (and a sampled
+subset matches per-request ``ServeEngine``), its prefill program count is
+O(|buckets|) and equals the planner-census prediction, zero jit compiles
+happen after warmup, and its p99 wall-clock TTFT beats the unbucketed run.
+
 Output is JSON (tokens/sec, time-to-first-token in dispatches, slot
 utilization, resident KV bytes) so CI can parse it; ``--smoke`` shrinks the
-trace to CI scale.
+trace to CI scale. ``--out`` with no value writes the canonical in-tree
+snapshot ``benchmarks/BENCH_serve.json``.
 
 Usage:
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--fleet]
-        [--out FILE]
+        [--heavy-traffic] [--out [FILE]]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+CANONICAL_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_serve.json")
 
 
 def build_trace(cfg, *, smoke: bool):
@@ -123,7 +140,7 @@ def run_continuous(cfg, params, trace, *, num_slots, page_size, num_pages):
     d = stats.as_dict()
     d.update(
         mean_ttft_dispatches=float(np.mean([o.ttft for o in outs.values()])),
-        compiles=eng._prefill_admit._cache_size() + eng._sample_decode._cache_size(),
+        compiles=eng.compile_counts()["total"],
         wall_s=wall,
         tokens_per_s=stats.emitted_tokens / wall if wall else float("inf"),
     )
@@ -184,14 +201,167 @@ def run_fleet(cfg, params, trace, *, chips, num_slots, page_size, num_pages):
     return d
 
 
+def build_heavy_trace(cfg, *, smoke: bool, buckets):
+    """Poisson arrivals, Zipfian prompt lengths: many short prompts, a heavy
+    tail of distinct lengths, and a slice past the top bucket so the
+    chunked path carries real traffic."""
+    import numpy as np
+
+    from repro.serve import Request
+
+    rng = np.random.default_rng(1234)
+    n = 48 if smoke else 400
+    top = buckets[-1]
+    lens = np.clip(rng.zipf(1.3, size=n), 1, top + top // 2).astype(int)
+    # guarantee chunked traffic regardless of the zipf draw
+    lens[:: max(1, n // 6)] = rng.integers(top + 1, top + top // 2, size=len(lens[:: max(1, n // 6)]))
+    budgets = rng.integers(4, 13 if smoke else 33, size=n)
+    arrivals = np.cumsum(rng.poisson(1.0, size=n))
+    reqs = []
+    for i in range(n):
+        toks = np.asarray(rng.integers(0, cfg.vocab_size, size=int(lens[i])))
+        reqs.append(Request(i, toks, max_new_tokens=int(budgets[i]),
+                            arrival=int(arrivals[i])))
+    return reqs
+
+
+def run_heavy(cfg, params, trace, *, num_slots, page_size, num_pages,
+              max_pages_per_seq, buckets, warmup):
+    """One heavy-traffic serve: bucketed planner when ``buckets`` is set
+    (AOT-warmed when ``warmup``), exact-length admission when None."""
+    import numpy as np
+
+    from repro.serve import ContinuousBatchingEngine
+
+    eng = ContinuousBatchingEngine(
+        cfg, params, num_slots=num_slots, page_size=page_size,
+        num_pages=num_pages, max_pages_per_seq=max_pages_per_seq,
+        prefill_buckets=buckets,
+    )
+    warm_s = 0.0
+    if warmup:
+        t0 = time.time()
+        eng.warmup()
+        warm_s = time.time() - t0
+    t0 = time.time()
+    outs, stats = eng.serve(trace)
+    wall = time.time() - t0
+    ttft_wall = np.asarray([o.ttft_wall_s for o in outs.values()])
+    qwait = np.asarray([o.queue_wait_steps for o in outs.values()])
+    cc = eng.compile_counts()
+    d = stats.as_dict()
+    d.update(
+        warmup_s=warm_s,
+        wall_s=wall,
+        tokens_per_s=stats.emitted_tokens / wall if wall else float("inf"),
+        ttft_wall_p50_s=float(np.percentile(ttft_wall, 50)),
+        ttft_wall_p99_s=float(np.percentile(ttft_wall, 99)),
+        queue_wait_p50_steps=float(np.percentile(qwait, 50)),
+        queue_wait_p99_steps=float(np.percentile(qwait, 99)),
+        compiles=cc,
+    )
+    return {r: o.tokens for r, o in outs.items()}, d, eng
+
+
+def run_heavy_traffic(cfg, params, *, smoke, num_slots, page_size):
+    """The bucketed-vs-unbucketed admission benchmark (see module doc)."""
+    import numpy as np
+
+    from repro.serve import ServeEngine, pages_needed
+    from repro.serve.bucketing import DEFAULT_PREFILL_BUCKETS, bucket_of
+
+    buckets = DEFAULT_PREFILL_BUCKETS
+    trace = build_heavy_trace(cfg, smoke=smoke, buckets=buckets)
+    # BOUNDED pool: room for num_slots maximal requests, NOT the whole
+    # trace at once — admission waits on PageAllocator.can_alloc and the
+    # queue-wait percentiles below measure that backpressure
+    max_pages_per_seq = max(
+        pages_needed(len(r.tokens) + r.max_new_tokens, page_size) for r in trace
+    )
+    num_pages = 1 + num_slots * max_pages_per_seq
+
+    un_out, un, _ = run_heavy(
+        cfg, params, trace, num_slots=num_slots, page_size=page_size,
+        num_pages=num_pages, max_pages_per_seq=max_pages_per_seq,
+        buckets=None, warmup=False,
+    )
+    bk_out, bk, eng = run_heavy(
+        cfg, params, trace, num_slots=num_slots, page_size=page_size,
+        num_pages=num_pages, max_pages_per_seq=max_pages_per_seq,
+        buckets=buckets, warmup=True,
+    )
+
+    # planner census: the CLOSED program set — the same signature model the
+    # static analyzer's recompile pass uses for this entry. Packing may
+    # merge prompts into a larger bucket than any one of them needs, so the
+    # census is the full ladder, not the per-request buckets.
+    predicted = {("prefill_admit", b) for b in buckets}
+    predicted |= {("prefill_chunk", eng.chunk_size), ("decode",)}
+    chunked_traffic = any(bucket_of(len(r.tokens), buckets) is None for r in trace)
+    tokens_match = set(un_out) == set(bk_out) and all(
+        np.array_equal(un_out[r], bk_out[r]) for r in un_out
+    )
+    # per-request ServeEngine reference on a length-spread sample (the full
+    # trace would re-run the model once per request)
+    sample = sorted(trace, key=lambda r: len(r.tokens))
+    sample = sample[:: max(1, len(sample) // 8)]
+    ref = ServeEngine(cfg, params, max_len=None, page_size=page_size)
+    serve_match = True
+    for r in sample:
+        import jax.numpy as jnp
+
+        res = ref.generate(jnp.asarray(r.tokens)[None],
+                           max_new_tokens=r.max_new_tokens)
+        want = np.asarray(res.tokens[0, len(r.tokens):])
+        serve_match &= np.array_equal(want, bk_out[r.rid])
+    checks = dict(
+        heavy_tokens_match_unbucketed=bool(tokens_match),
+        heavy_tokens_match_serve_engine=bool(serve_match),
+        # O(|buckets|): the whole run compiles at most one program per
+        # bucket + the chunk program + decode, vs one per distinct length
+        heavy_compile_bounded=bk["compiles"]["total"] <= len(buckets) + 2,
+        heavy_zero_jit_after_warmup=bk["compiles"]["jit_fallback"] == 0,
+        # measured compiles land exactly on the census set, and every
+        # program actually dispatched is one the census predicts
+        heavy_census_match=(
+            bk["compiles"]["total"] == len(predicted)
+            and set(eng.used_programs) <= predicted
+            and ("decode",) in eng.used_programs
+            and (("prefill_chunk", eng.chunk_size) in eng.used_programs)
+            == chunked_traffic
+        ),
+        heavy_p99_ttft_reduced=bk["ttft_wall_p99_s"] < un["ttft_wall_p99_s"],
+    )
+    report = dict(
+        requests=len(trace),
+        distinct_prompt_lens=len({len(r.tokens) for r in trace}),
+        buckets=list(buckets),
+        chunk_size=eng.chunk_size,
+        num_pages=num_pages,
+        max_pages_per_seq=max_pages_per_seq,
+        serve_engine_sample=len(sample),
+        predicted_programs=sorted(map(str, predicted)),
+        used_programs=sorted(map(str, eng.used_programs)),
+        unbucketed=un,
+        bucketed=bk,
+        checks=checks,
+    )
+    return report, checks
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI scale")
     ap.add_argument("--fleet", action="store_true", help="add the sharded fleet tier")
+    ap.add_argument("--heavy-traffic", action="store_true",
+                    help="add the Poisson/Zipf bucketed-vs-unbucketed "
+                         "admission benchmark (bounded page pool)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--chips", type=int, default=4)
-    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--out", type=str, nargs="?", const=CANONICAL_OUT,
+                    default=None, metavar="FILE",
+                    help=f"write the JSON report (no value: {CANONICAL_OUT})")
     ap.add_argument(
         "--no-analysis", action="store_true",
         help="skip the static-analyzer section (donated-bytes fraction, "
@@ -268,6 +438,13 @@ def main() -> int:
             num_slots=args.slots, page_size=args.page_size, num_pages=num_pages,
         )
         checks["fleet_pinned"] = report["fleet"]["pinned_vs_per_chip_engines"]
+    if args.heavy_traffic:
+        heavy, heavy_checks = run_heavy_traffic(
+            cfg, params, smoke=args.smoke,
+            num_slots=args.slots, page_size=args.page_size,
+        )
+        report["heavy_traffic"] = heavy
+        checks.update(heavy_checks)
 
     text = json.dumps(report, indent=2)
     print(text)

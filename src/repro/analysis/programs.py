@@ -39,7 +39,6 @@ from repro.analysis.kernelgeom import (
 from repro.analysis.recompile import EntryTraceModel, TraceRequest
 from repro.analysis.shardlint import FakeMesh, ShardingEntry
 from repro.core.masking import FaultContext
-from repro.serve.kvcache import pages_needed
 
 __all__ = ["StackPrograms", "build_stack"]
 
@@ -50,8 +49,9 @@ _SLOTS = 4
 _PAGE_SIZE = 8
 _NUM_PAGES = 32
 _MAX_PAGES_PER_SEQ = 8
-_ADMIT_PLEN = 12
-_ADMIT_CHAIN = 4
+_ADMIT_BUCKET = 16  # reduced-config bucket for lowering the packed admit
+_ADMIT_CHUNK = 16  # reduced-config chunked-prefill width
+_MAX_PACK = 4
 _TRAIN_BATCH = 2
 _TRAIN_SEQ = 16
 _POP = 4
@@ -124,6 +124,9 @@ def _continuous_specs(cfg_r) -> list:
         page_size=_PAGE_SIZE,
         num_pages=_NUM_PAGES,
         max_pages_per_seq=_MAX_PAGES_PER_SEQ,
+        prefill_buckets=(_ADMIT_BUCKET, 2 * _ADMIT_BUCKET),
+        chunk_size=_ADMIT_CHUNK,
+        max_pack=_MAX_PACK,
     )
     params_s, _ = param_struct(cfg_r)
     cache_s = jax.eval_shape(
@@ -151,20 +154,47 @@ def _continuous_specs(cfg_r) -> list:
         ),
         ProgramSpec(
             name="continuous.prefill_admit",
-            fn=eng._prefill_admit,
+            fn=eng._packed_admit,
             args=(
                 params_s,
-                jax.ShapeDtypeStruct((1, _ADMIT_PLEN), jnp.int32),
+                jax.ShapeDtypeStruct((1, _ADMIT_BUCKET), jnp.int32),
+                jax.ShapeDtypeStruct((1, _ADMIT_BUCKET), jnp.int32),
+                jax.ShapeDtypeStruct((1, _ADMIT_BUCKET), jnp.int32),
+                ctx, cache_s, cur_s, active_s, remaining_s,
+                jax.ShapeDtypeStruct((_ADMIT_BUCKET,), jnp.int32),
+                jax.ShapeDtypeStruct((_ADMIT_BUCKET,), jnp.int32),
+                jax.ShapeDtypeStruct((_MAX_PACK,), jnp.int32),
+                jax.ShapeDtypeStruct((_MAX_PACK,), jnp.int32),
+                jax.ShapeDtypeStruct((_MAX_PACK, _MAX_PAGES_PER_SEQ), jnp.int32),
+                jax.ShapeDtypeStruct((_MAX_PACK,), jnp.int32),
+                jax.ShapeDtypeStruct((_MAX_PACK,), jnp.int32),
+            ),
+            carried=frozenset({5, 6, 7, 8}),
+            arg_names=(
+                "params", "tokens", "positions", "segments", "ctx", "cache",
+                "cur_logits", "active", "remaining", "page_ix", "page_off",
+                "gather_pos", "slots", "rows", "seq_lens", "budgets",
+            ),
+        ),
+        ProgramSpec(
+            name="continuous.prefill_chunk",
+            fn=eng._prefill_chunk,
+            args=(
+                params_s,
+                jax.ShapeDtypeStruct((1, _ADMIT_CHUNK), jnp.int32),
                 ctx, cache_s, cur_s, active_s, remaining_s,
                 _scalar(jnp.int32),
-                jax.ShapeDtypeStruct((_ADMIT_CHAIN,), jnp.int32),
-                _scalar(jnp.int32),
+                jax.ShapeDtypeStruct((_MAX_PAGES_PER_SEQ,), jnp.int32),
+                jax.ShapeDtypeStruct((_ADMIT_CHUNK,), jnp.int32),
+                jax.ShapeDtypeStruct((_ADMIT_CHUNK,), jnp.int32),
+                _scalar(jnp.int32), _scalar(jnp.int32), _scalar(jnp.int32),
+                _scalar(jnp.bool_),
             ),
             carried=frozenset({3, 4, 5, 6}),
-            kwargs=dict(chain=_ADMIT_CHAIN),
             arg_names=(
-                "params", "tokens", "ctx", "cache", "cur_logits",
-                "active", "remaining", "slot", "page_ids", "budget",
+                "params", "tokens", "ctx", "cache", "cur_logits", "active",
+                "remaining", "slot", "row", "page_ix", "page_off", "prefix",
+                "valid", "budget", "activate",
             ),
         ),
     ]
@@ -238,11 +268,15 @@ def _trace_models() -> list:
     train.step is launch-configured: its shapes never vary with a request.
     """
 
+    from repro.serve.bucketing import DEFAULT_PREFILL_BUCKETS, bucket_of, ladder_rung
+
     def serve_prefill_sig(r: TraceRequest) -> tuple:
-        # ServeEngine._prefill_len: tokens (B, plen) + static cache_len;
-        # the shipped default max_len=4096 pins cache_len, the raw prompt
-        # length flows straight into the traced shape (ROADMAP item 1)
-        return ("serve.prefill", r.prompt_len, 4096)
+        # ServeEngine._prefill_len: prompts pad up the bucket ladder with a
+        # traced valid_len, so the traced width is the prompt's ladder rung
+        # (capped by the shipped default max_len=4096 capacity) — one
+        # program per rung, not per distinct prompt length
+        rung = min(ladder_rung(r.prompt_len, DEFAULT_PREFILL_BUCKETS), 4096)
+        return ("serve.prefill", rung, 4096)
 
     def serve_decode_sig(r: TraceRequest) -> tuple:
         # fused sample+decode: (B, V) logits + fixed-capacity cache
@@ -253,9 +287,13 @@ def _trace_models() -> list:
         return ("continuous.sample_decode", _SLOTS, _NUM_PAGES, _PAGE_SIZE)
 
     def cont_admit_sig(r: TraceRequest) -> tuple:
-        # _prefill_admit: tokens (1, plen) + static page-chain length
-        chain = pages_needed(r.prompt_len + r.max_new_tokens, _PAGE_SIZE)
-        return ("continuous.prefill_admit", r.prompt_len, chain)
+        # bucketed planner: a prompt admits at its bucket's packed-admit
+        # program, or — past the top bucket — through the single chunked
+        # program; page chains and pack occupancy are traced, not static
+        b = bucket_of(r.prompt_len, DEFAULT_PREFILL_BUCKETS)
+        if b is None:
+            return ("continuous.prefill_chunk", DEFAULT_PREFILL_BUCKETS[-1])
+        return ("continuous.prefill_admit", b)
 
     def train_sig(r: TraceRequest) -> tuple:
         return ("train.step", _TRAIN_BATCH, _TRAIN_SEQ)

@@ -41,12 +41,20 @@ from jax.sharding import PartitionSpec as P
 from repro.core.masking import FaultContext, healthy, stack_contexts
 from repro.launch.mesh import make_pop_mesh
 from repro.models import model as M
+from repro.serve.bucketing import (
+    DEFAULT_PREFILL_BUCKETS,
+    PackItem,
+    bucket_of,
+    build_pack,
+    chunk_step_maps,
+    plan_prefill,
+    validate_buckets,
+)
 from repro.serve.continuous import (
     Request,
     RequestOutput,
     ServeStats,
     _SlotTable,
-    prefill_to_chain,
 )
 from repro.serve.engine import make_sample_decode
 from repro.serve.kvcache import DEFAULT_PAGE_SIZE, PageAllocator, page_bytes
@@ -172,6 +180,9 @@ class ShardedFleetServeEngine:
         num_pages: int = 128,
         max_pages_per_seq: Optional[int] = None,
         pad_id: int = 0,
+        prefill_buckets=DEFAULT_PREFILL_BUCKETS,
+        chunk_size: Optional[int] = None,
+        max_pack: int = 4,
     ):
         n = len(params_list)
         if n == 0:
@@ -210,6 +221,21 @@ class ShardedFleetServeEngine:
         self.num_pages = num_pages
         self.max_pages_per_seq = max_pages_per_seq or (num_pages - 1)
         self.pad_id = pad_id
+        if prefill_buckets is None:
+            self.prefill_buckets = None
+            self.chunk_size: Optional[int] = None
+            self.max_pack = 1
+        else:
+            self.prefill_buckets = validate_buckets(prefill_buckets)
+            self.chunk_size = int(chunk_size) if chunk_size else self.prefill_buckets[-1]
+            if self.chunk_size < page_size or self.chunk_size % page_size:
+                raise ValueError(
+                    f"chunk_size {self.chunk_size} must be a positive multiple "
+                    f"of page_size {page_size} (chunk starts must be page-aligned)"
+                )
+            if max_pack < 1:
+                raise ValueError(f"max_pack must be >= 1, got {max_pack}")
+            self.max_pack = int(max_pack)
         self._page_bytes = page_bytes(cfg, page_size)
         self.params_list = list(params_list)
         self.ctxs = [c or healthy() for c in ctxs]
@@ -257,36 +283,77 @@ class ShardedFleetServeEngine:
             ),
             donate_argnums=donate,
         )
-        self._prefill_admit = jax.jit(
-            self._prefill_admit_fn,
-            static_argnames=("chain",),
-            donate_argnums=(3, 4, 5, 6),
+        self._packed_admit = jax.jit(
+            self._packed_admit_fn, donate_argnums=(5, 6, 7, 8)
+        )
+        self._prefill_chunk = jax.jit(
+            self._prefill_chunk_fn, donate_argnums=(3, 4, 5, 6)
         )
 
-    # -- jitted admission: prefill one chip's request, splice into its slot --
+    # -- jitted admission: the bucketed planner's programs, chip-indexed ----
 
-    def _prefill_admit_fn(
-        self, params_c, tokens, ctx_c, cache, cur, active, remaining,
-        chip, slot, pids, budget, *, chain
+    def _packed_admit_fn(
+        self, params_c, tokens, positions, segments, ctx_c, cache, cur, active,
+        remaining, chip, page_ix, page_off, gather_pos, slots, rows, seq_lens,
+        budgets,
     ):
-        plen = tokens.shape[1]
-        logits, kc, vc = prefill_to_chain(
-            self.cfg, params_c, tokens, ctx_c, page_size=self.page_size, chain=chain
+        """Chip-indexed twin of ``ContinuousBatchingEngine._packed_admit_fn``:
+        admit a PACK of one chip's requests in one bucket-shaped dispatch,
+        scattering into the fleet's stacked state at ``chip``. The chip index
+        is traced, so one compiled program per bucket serves the whole fleet
+        (per-fault-context pytree structure permitting)."""
+        hidden, dense = M.prefill(
+            params_c, {"tokens": tokens, "positions": positions}, self.cfg,
+            ctx_c, full_kv=True, return_hidden=True, segments=segments,
+            attn_impl="dense",
         )
-        kc = jnp.moveaxis(kc, 1, 0)
-        vc = jnp.moveaxis(vc, 1, 0)
-        row = jnp.zeros((self.max_pages_per_seq,), jnp.int32).at[:chain].set(pids)
+        # (L, 1, Hkv, W, hd) -> (W, L, Hkv, hd): the advanced indices
+        # (chip, page_ix, page_off) around the slices put the token dim first
+        k = jnp.transpose(dense["k"][:, 0], (2, 0, 1, 3))
+        v = jnp.transpose(dense["v"][:, 0], (2, 0, 1, 3))
+        kp = cache["k_pages"].at[chip, :, page_ix, :, page_off].set(k.astype(cache["k_pages"].dtype))
+        vp = cache["v_pages"].at[chip, :, page_ix, :, page_off].set(v.astype(cache["v_pages"].dtype))
+        h = hidden[0, gather_pos]  # (max_pack, d)
+        logits = M.unembed(self.cfg, params_c, h[None], ctx_c)[0]  # (max_pack, V)
         cache = dict(
-            # advanced indices (chip, pids) around the layer slice put the
-            # chain axis first — kc/vc are moveaxis'd to match
-            k_pages=cache["k_pages"].at[chip, :, pids].set(kc.astype(cache["k_pages"].dtype)),
-            v_pages=cache["v_pages"].at[chip, :, pids].set(vc.astype(cache["v_pages"].dtype)),
-            block_tables=cache["block_tables"].at[chip, slot].set(row),
-            seq_lens=cache["seq_lens"].at[chip, slot].set(plen),
+            k_pages=kp,
+            v_pages=vp,
+            block_tables=cache["block_tables"].at[chip, slots].set(rows),
+            seq_lens=cache["seq_lens"].at[chip, slots].set(seq_lens),
         )
-        cur = cur.at[chip, slot].set(logits[0].astype(cur.dtype))
-        active = active.at[chip, slot].set(True)
-        remaining = remaining.at[chip, slot].set(budget)
+        cur = cur.at[chip, slots].set(logits.astype(cur.dtype))
+        active = active.at[chip, slots].set(True)
+        remaining = remaining.at[chip, slots].set(budgets)
+        return cache, cur, active, remaining
+
+    def _prefill_chunk_fn(
+        self, params_c, tokens, ctx_c, cache, cur, active, remaining,
+        chip, slot, row, page_ix, page_off, prefix, valid, budget, activate,
+    ):
+        """Chip-indexed twin of ``ContinuousBatchingEngine._prefill_chunk_fn``:
+        one fixed-size chunk of a long prompt streaming into one chip's page
+        chain; the final chunk (``activate``) flips the slot live."""
+        logits, kc, vc = M.prefill_chunk(
+            params_c, tokens, self.cfg, ctx_c,
+            k_pages=cache["k_pages"][chip], v_pages=cache["v_pages"][chip],
+            row=row, prefix_len=prefix, valid_len=valid,
+        )
+        k = jnp.transpose(kc[:, 0], (2, 0, 1, 3))
+        v = jnp.transpose(vc[:, 0], (2, 0, 1, 3))
+        new_len = jnp.where(activate, prefix + valid, cache["seq_lens"][chip, slot])
+        cache = dict(
+            k_pages=cache["k_pages"].at[chip, :, page_ix, :, page_off].set(k.astype(cache["k_pages"].dtype)),
+            v_pages=cache["v_pages"].at[chip, :, page_ix, :, page_off].set(v.astype(cache["v_pages"].dtype)),
+            block_tables=cache["block_tables"].at[chip, slot].set(row),
+            seq_lens=cache["seq_lens"].at[chip, slot].set(new_len),
+        )
+        cur = cur.at[chip, slot].set(
+            jnp.where(activate, logits[0].astype(cur.dtype), cur[chip, slot])
+        )
+        active = active.at[chip, slot].set(active[chip, slot] | activate)
+        remaining = remaining.at[chip, slot].set(
+            jnp.where(activate, budget, remaining[chip, slot])
+        )
         return cache, cur, active, remaining
 
     # -- the fleet serve loop ------------------------------------------------
@@ -331,27 +398,80 @@ class ShardedFleetServeEngine:
         temp = jnp.float32(temperature)
         eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
 
+        buckets = self.prefill_buckets
+        top = buckets[-1] if buckets else None
+
+        def flush_pack(c, pack):
+            nonlocal cache, cur, active, remaining
+            if not pack:
+                return
+            total = sum(len(it.tokens) for it in pack)
+            width = total if buckets is None else bucket_of(total, buckets)
+            arrays = build_pack(
+                pack, bucket=width, max_pack=self.max_pack,
+                page_size=self.page_size, max_pages_per_seq=self.max_pages_per_seq,
+                num_slots=self.num_slots, pad_id=self.pad_id,
+            )
+            cache, cur, active, remaining = self._packed_admit(
+                self.params_list[c], arrays["tokens"], arrays["positions"],
+                arrays["segments"], self.ctxs[c], cache, cur, active, remaining,
+                np.int32(c), arrays["page_ix"], arrays["page_off"],
+                arrays["gather_pos"], arrays["slots"], arrays["rows"],
+                arrays["seq_lens"], arrays["budgets"],
+            )
+            stats.prefill_dispatches += 1
+            pack.clear()
+
+        def run_chunks(c, slot, r, pages):
+            nonlocal cache, cur, active, remaining
+            steps = plan_prefill(
+                len(r.tokens), buckets=buckets, chunk_size=self.chunk_size
+            )
+            toks = np.asarray(r.tokens, np.int32)
+            row = np.zeros((self.max_pages_per_seq,), np.int32)
+            row[: len(pages)] = pages
+            for st in steps:
+                maps = chunk_step_maps(st, pages, page_size=self.page_size)
+                ct = np.full((st.size,), self.pad_id, np.int32)
+                ct[: st.valid] = toks[st.start : st.start + st.valid]
+                cache, cur, active, remaining = self._prefill_chunk(
+                    self.params_list[c], ct[None], self.ctxs[c], cache, cur,
+                    active, remaining, np.int32(c), np.int32(slot), row,
+                    maps["page_ix"], maps["page_off"], np.int32(st.start),
+                    np.int32(st.valid), np.int32(r.max_new_tokens),
+                    np.bool_(st.final),
+                )
+                stats.prefill_dispatches += 1
+                stats.chunk_dispatches += 1
+
         clock = 0
         while not all(t.done for t in tables):
             for c, table in enumerate(tables):
+                table.stamp_arrivals(clock)
+                pack: list[PackItem] = []
                 while True:
                     adm = table.pop_admission(clock)
                     if adm is None:
                         break
                     slot, r, pages = adm
-                    cache, cur, active, remaining = self._prefill_admit(
-                        self.params_list[c],
-                        jnp.asarray(r.tokens, jnp.int32)[None],
-                        self.ctxs[c], cache, cur, active, remaining,
-                        jnp.asarray(c, jnp.int32),
-                        jnp.asarray(slot, jnp.int32),
-                        jnp.asarray(pages, jnp.int32),
-                        jnp.asarray(r.max_new_tokens, jnp.int32),
-                        chain=len(pages),
-                    )
                     table.outputs_admitted[r.rid] = clock
-                    stats.prefill_dispatches += 1
                     stats.admitted += 1
+                    plen = len(r.tokens)
+                    if top is not None and plen > top:
+                        flush_pack(c, pack)
+                        run_chunks(c, slot, r, pages)
+                        continue
+                    if pack and (
+                        len(pack) >= self.max_pack
+                        or (top is not None
+                            and sum(len(i.tokens) for i in pack) + plen > top)
+                    ):
+                        flush_pack(c, pack)
+                    pack.append(
+                        PackItem(np.asarray(r.tokens, np.int32), slot,
+                                 tuple(pages), r.max_new_tokens)
+                    )
+                flush_pack(c, pack)
             pages_in_use = sum(a.pages_in_use for a in allocs)
             stats.peak_resident_kv_bytes = max(
                 stats.peak_resident_kv_bytes, pages_in_use * self._page_bytes

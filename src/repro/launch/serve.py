@@ -26,6 +26,17 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching (paged KV, skewed budgets)")
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--buckets", type=int, nargs="+", default=None, metavar="W",
+                    help="prefill bucket ladder (default 32 64 128 256); "
+                         "pass 0 to disable bucketing (exact-length prefill)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked-prefill width for prompts past the top "
+                         "bucket (default: the top bucket)")
+    ap.add_argument("--max-pack", type=int, default=4,
+                    help="max short prompts packed into one bucket dispatch")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-precompile every (bucket, chunk, decode) "
+                         "program before serving (continuous engine only)")
     args = ap.parse_args()
 
     import jax
@@ -62,20 +73,36 @@ def main() -> None:
             Request(i, np.asarray(prompts[i]), max_new_tokens=budgets[i], arrival=i % 3)
             for i in range(args.batch)
         ]
-        eng = ContinuousBatchingEngine(cfg, params, ctx, num_slots=args.slots)
+        from repro.serve.bucketing import DEFAULT_PREFILL_BUCKETS
+
+        buckets = (
+            None
+            if args.buckets == [0]
+            else tuple(args.buckets) if args.buckets else DEFAULT_PREFILL_BUCKETS
+        )
+        eng = ContinuousBatchingEngine(
+            cfg, params, ctx, num_slots=args.slots, prefill_buckets=buckets,
+            chunk_size=args.chunk_size, max_pack=args.max_pack,
+        )
+        if args.warmup:
+            t0 = time.time()
+            n = eng.warmup()
+            print(f"warmup: {n} AOT programs in {time.time() - t0:.2f}s")
         t0 = time.time()
         outs, stats = eng.serve(reqs, temperature=args.temperature)
         dt = time.time() - t0
+        cc = eng.compile_counts()
         print(
             f"{stats.emitted_tokens} tokens over {args.batch} requests in "
             f"{stats.decode_dispatches} dispatches / {dt:.2f}s "
             f"({stats.emitted_tokens/dt:.1f} tok/s, "
             f"slot util {stats.slot_utilization:.0%}, "
-            f"peak KV {stats.peak_resident_kv_bytes} B)"
+            f"peak KV {stats.peak_resident_kv_bytes} B, "
+            f"compiles aot={cc['aot']} jit={cc['jit_fallback']})"
         )
         for i in range(min(2, args.batch)):
             o = outs[i]
-            print(f"req{i}: ttft={o.ttft} {o.tokens.tolist()}")
+            print(f"req{i}: ttft={o.ttft} qwait={o.queue_wait_steps} {o.tokens.tolist()}")
         return
 
     engine = ServeEngine(cfg, params, ctx, max_len=args.max_len)

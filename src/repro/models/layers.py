@@ -78,12 +78,20 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 def dense_attention(
     q: Array, k: Array, v: Array, *, causal: bool, window: Optional[int],
     q_offset, kv_valid_len=None, scale: Optional[float] = None,
+    segments: Optional[Array] = None,
 ) -> Array:
     """Materializing attention; q_offset may be a traced scalar (decode).
 
     ``q_offset`` / ``kv_valid_len`` may also be per-sequence ``(B,)`` arrays
     (the continuous-batching decode path, where every slot sits at its own
     position in its own KV chain); the scalar path is left byte-identical.
+
+    ``segments`` is a ``(B, S)`` int array for packed prefill (several
+    prompts in one row, ``repro.serve.bucketing``): tokens may only attend
+    within their own segment. Requires ``sq == skv`` — the ids describe
+    queries and keys at once. Causal/window masks stay in packed-row index
+    space, which equals per-segment position space within a segment because
+    packed positions restart per segment.
     """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
@@ -94,7 +102,9 @@ def dense_attention(
     s *= scale
     off = jnp.asarray(q_offset)
     vld = None if kv_valid_len is None else jnp.asarray(kv_valid_len)
-    if off.ndim or (vld is not None and vld.ndim):
+    if segments is not None and sq != skv:
+        raise ValueError(f"segment masking needs sq == skv, got {sq} vs {skv}")
+    if off.ndim or (vld is not None and vld.ndim) or segments is not None:
         # per-sequence offsets/lengths: mask is (B, sq, skv)
         rows = jnp.broadcast_to(off, (b,))[:, None, None] + jnp.arange(sq)[None, :, None]
         cols = jnp.arange(skv)[None, None, :]
@@ -105,6 +115,8 @@ def dense_attention(
             mask = mask & (cols > rows - window)
         if vld is not None:
             mask = mask & (cols < jnp.broadcast_to(vld, (b,))[:, None, None])
+        if segments is not None:
+            mask = mask & (segments[:, :, None] == segments[:, None, :])
         s = jnp.where(mask[:, None, None], s, -1e30)
     else:
         rows = jnp.arange(sq)[:, None] + q_offset
@@ -247,16 +259,23 @@ def blockwise_attention(
 
 
 def attention_impl(
-    q, k, v, *, causal, window, q_offset=0, impl="auto", kv_valid_len=None, scale=None
+    q, k, v, *, causal, window, q_offset=0, impl="auto", kv_valid_len=None, scale=None,
+    segments=None,
 ):
     sq = q.shape[2]
     if impl == "auto":
-        impl = "dense" if (sq <= 512 or kv_valid_len is not None) else "blockwise"
+        impl = (
+            "dense"
+            if (sq <= 512 or kv_valid_len is not None or segments is not None)
+            else "blockwise"
+        )
     if impl == "dense":
         return dense_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
-            kv_valid_len=kv_valid_len, scale=scale,
+            kv_valid_len=kv_valid_len, scale=scale, segments=segments,
         )
+    if segments is not None:
+        raise ValueError(f"segment-packed attention is dense-only, got impl {impl!r}")
     if impl.startswith("blockwise"):
         return blockwise_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
@@ -310,10 +329,15 @@ def attention_block(
     impl: str = "auto",
     cache: Optional[KVCache] = None,
     return_kv: bool = False,
+    segments: Optional[Array] = None,
 ):
     """Returns (out, new_cache). With ``return_kv`` (prefill) the second
-    element is the raw (k, v) pair (B, Hkv, S, D) for cache assembly."""
+    element is the raw (k, v) pair (B, Hkv, S, D) for cache assembly.
+    ``segments`` (packed prefill, cache-free path only) restricts attention
+    to same-segment tokens — see ``dense_attention``."""
     b, s, _ = x.shape
+    if segments is not None and cache is not None:
+        raise ValueError("segment-packed attention is a cache-free prefill path")
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q = fault_linear(x, p["wq"], ctx).reshape(b, s, hq, hd)
     k = fault_linear(x, p["wk"], ctx).reshape(b, s, hkv, hd)
@@ -379,7 +403,7 @@ def attention_block(
     else:
         o = attention_impl(
             q, k, v, causal=not cfg.is_encoder, window=cfg.sliding_window,
-            q_offset=0, impl=impl,
+            q_offset=0, impl=impl, segments=segments,
         )
         if return_kv:
             new_cache = (k, v)

@@ -258,6 +258,7 @@ def _block(
     cache: Optional[dict] = None,
     build_cache: bool = False,
     cache_len: int = 0,
+    segments: Optional[Array] = None,
 ):
     """One layer. Returns (x, new_cache (dict|None), aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -313,6 +314,7 @@ def _block(
     a, kv_out = attention_block(
         lp["attn"], h, cfg, ctx,
         positions=positions, impl=attn_impl, cache=kv_cache, return_kv=build_cache,
+        segments=segments,
     )
     x = x + a
     if paged:
@@ -521,22 +523,54 @@ def prefill(
     attn_impl: str = "auto",
     moe_impl: str = "einsum",
     moe_cf: float = 1.25,
+    valid_len=None,
+    full_kv: bool = False,
+    return_hidden: bool = False,
+    segments: Optional[Array] = None,
 ) -> tuple[Array, dict]:
     """Full-sequence forward that also builds the decode cache.
 
-    Returns (logits_last (B, V), cache)."""
+    Returns (logits_last (B, V), cache). With every new option at its
+    default the function is byte-identical to the pre-bucketing prefill.
+
+    ``valid_len`` (traced scalar or ``(B,)``) marks the real prompt length
+    of a right-padded batch: logits come from position ``valid_len - 1``
+    and the cache assembly keeps the *valid* tokens (the SWA ring
+    permutation is computed from ``valid_len``, not the padded width), with
+    ``cache["index"] = valid_len`` so decode overwrites the pad garbage.
+    Pad columns never contaminate real rows — causality alone excludes
+    right-pad keys from every real query.
+
+    ``full_kv`` skips ring/tail truncation and returns the raw
+    ``(L, B, Hkv, S, hd)`` KV as the cache's k/v — the paged-admission
+    route, where window masking happens at the paged read instead.
+
+    ``return_hidden`` returns the post-norm hidden states ``(B, S, d)`` in
+    place of logits so the caller can gather arbitrary positions (packed
+    prefill gathers one last-token row per segment) and unembed itself.
+
+    ``segments`` (``(B, S)`` int, with per-segment restarting
+    ``batch["positions"]``) packs several prompts into one row; attention
+    is masked to same-segment tokens (``repro.models.layers``).
+    """
     ctx = ctx or healthy()
     x, positions = embed_inputs(cfg, params, batch, ctx)
     b, s = x.shape[0], x.shape[1]
     cache_len = cache_len or s
     s_buf = cache_buffer_len(cfg, cache_len)
+    if (full_kv or segments is not None or valid_len is not None) and (
+        cfg.has_ssm or cfg.is_encoder
+    ):
+        # SSM state is a running scan — right-pad tokens would advance it —
+        # and encoders attend bidirectionally, so pad keys aren't causal-masked
+        raise ValueError("padded/packed prefill supports causal attention families only")
 
     def body(carry, lp):
         h, aux = carry
         h, piece, a = _block(
             lp, h, cfg, ctx,
             positions=positions, attn_impl=attn_impl, moe_impl=moe_impl,
-            moe_cf=moe_cf, build_cache=True,
+            moe_cf=moe_cf, build_cache=True, segments=segments,
         )
         h = shard_activation(h, ("batch", "seq_carry", "embed"))
         return (h, aux + a), piece
@@ -545,14 +579,44 @@ def prefill(
         body, (x, jnp.zeros((), jnp.float32)), params["layers"]
     )
     x = apply_norm(x, params["final_ln"], cfg.norm_eps)
-    logits = unembed(cfg, params, x[:, -1:, :], ctx)[:, 0]
+    if return_hidden:
+        out = x
+    elif valid_len is None:
+        out = unembed(cfg, params, x[:, -1:, :], ctx)[:, 0]
+    else:
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if vl.ndim == 0:
+            last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1, axis=1)
+        else:
+            last = jnp.take_along_axis(x, (vl - 1)[:, None, None], axis=1)
+        out = unembed(cfg, params, last, ctx)[:, 0]
+
+    if full_kv:
+        k_new, v_new = pieces["kv"]
+        dt = jnp.dtype(cfg.dtype)
+        index = jnp.asarray(s if valid_len is None else valid_len, jnp.int32)
+        return out, dict(k=k_new.astype(dt), v=v_new.astype(dt), index=index)
 
     cache = init_cache(cfg, b, cache_len)
     if cfg.has_attention:
         k_new, v_new = pieces["kv"]  # (L, B, Hkv, S, hd)
         if s >= s_buf:
-            tail_k, tail_v = k_new[..., -s_buf:, :], v_new[..., -s_buf:, :]
-            perm = jnp.asarray(_ring_perm(s_buf, s)) if cfg.sliding_window and s_buf == cfg.sliding_window else jnp.arange(s_buf)
+            if valid_len is None:
+                tail_k, tail_v = k_new[..., -s_buf:, :], v_new[..., -s_buf:, :]
+                perm = jnp.asarray(_ring_perm(s_buf, s)) if cfg.sliding_window and s_buf == cfg.sliding_window else jnp.arange(s_buf)
+            else:
+                # padded prompt: the last s_buf VALID tokens end at valid_len
+                vl = jnp.asarray(valid_len, jnp.int32)
+                start = jnp.clip(vl - s_buf, 0, s - s_buf)
+                tail_k = jax.lax.dynamic_slice_in_dim(k_new, start, s_buf, axis=3)
+                tail_v = jax.lax.dynamic_slice_in_dim(v_new, start, s_buf, axis=3)
+                if cfg.sliding_window and s_buf == cfg.sliding_window:
+                    # generalizes _ring_perm to a traced total: before the
+                    # ring wraps (vl < s_buf) the layout is linear
+                    shift = jnp.where(vl >= s_buf, vl % s_buf, 0)
+                    perm = (jnp.arange(s_buf) - shift) % s_buf
+                else:
+                    perm = jnp.arange(s_buf)
             cache["k"] = jnp.take(tail_k, perm, axis=3).astype(cache["k"].dtype)
             cache["v"] = jnp.take(tail_v, perm, axis=3).astype(cache["v"].dtype)
         else:
@@ -566,8 +630,82 @@ def prefill(
         sc = pieces["ssm"]
         cache["conv"] = sc.conv.astype(cache["conv"].dtype)
         cache["h"] = sc.h
-    cache["index"] = jnp.asarray(s, jnp.int32)
-    return logits, cache
+    cache["index"] = jnp.asarray(s if valid_len is None else valid_len, jnp.int32)
+    return out, cache
+
+
+def prefill_chunk(
+    params: dict,
+    tokens: Array,  # (1, C) — one chunk of one request's prompt
+    cfg,
+    ctx: Optional[FaultContext] = None,
+    *,
+    k_pages: Array,  # (L, P, Hkv, page, hd) shared pool
+    v_pages: Array,
+    row: Array,  # (max_pages_per_seq,) int32 — this slot's page chain
+    prefix_len,  # traced scalar: tokens already prefilled (multiple of C)
+    valid_len,  # traced scalar: real tokens in this chunk (== C except last)
+    moe_impl: str = "einsum",
+    moe_cf: float = 1.25,
+) -> tuple[Array, Array, Array]:
+    """One chunked-prefill step: continue a prompt against its paged prefix.
+
+    Gathers the slot's page chain into a dense buffer, runs the chunk as a
+    multi-token continuation (causal attention at ``q_offset=prefix_len``
+    over ``prefix + chunk`` valid keys — sliding windows are handled by the
+    dense window mask, never the ring buffer, so chunk boundaries crossing
+    the window are exact), and returns
+    ``(logits (1, V) at valid_len - 1, k_chunk, v_chunk (L, 1, Hkv, C, hd))``
+    for the caller to scatter into the pool. ONE compiled shape covers every
+    chunk of every prompt: prefix/valid are traced, the chain width is the
+    engine-wide ``max_pages_per_seq``.
+    """
+    ctx = ctx or healthy()
+    if cfg.has_ssm or cfg.is_encoder:
+        raise ValueError("chunked prefill supports causal attention families only")
+    b, s = tokens.shape
+    if b != 1:
+        raise ValueError(f"chunked prefill is one request per dispatch, got batch {b}")
+    L, _, hkv, page, hd = k_pages.shape
+    cap = row.shape[0] * page
+    # buffer must fit any chunk write at a chunk-aligned prefix, and must
+    # dodge the ring-buffer branch in attention_block (its causal=False
+    # shortcut is decode-only — wrong for multi-token chunks)
+    w_buf = -(-cap // s) * s
+    if cfg.sliding_window and w_buf == cfg.sliding_window:
+        w_buf += page
+    prefix = jnp.asarray(prefix_len, jnp.int32)
+    vl = jnp.asarray(valid_len, jnp.int32)
+    positions = jnp.broadcast_to(prefix + jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard_activation(x, ("batch", "seq", "embed"))
+
+    def chain_dense(pool):  # (L, P, Hkv, page, hd) -> (L, 1, Hkv, w_buf, hd)
+        g = jnp.transpose(jnp.take(pool, row, axis=1), (0, 2, 1, 3, 4))
+        g = g.reshape(L, hkv, cap, hd)
+        return jnp.pad(g, ((0, 0), (0, 0), (0, w_buf - cap), (0, 0)))[:, None]
+
+    layer_cache = {"k": chain_dense(k_pages), "v": chain_dense(v_pages)}
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, lc = xs
+        h, nc, a = _block(
+            lp, h, cfg, ctx,
+            positions=positions, attn_impl="dense", moe_impl=moe_impl,
+            moe_cf=moe_cf, cache=lc, cache_len=prefix,
+        )
+        return (h, aux + a), nc
+
+    (x, _aux), new_layer_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], layer_cache)
+    )
+    x = apply_norm(x, params["final_ln"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1, axis=1)
+    logits = unembed(cfg, params, last, ctx)[:, 0]
+    k_chunk = jax.lax.dynamic_slice_in_dim(new_layer_cache["k"], prefix, s, axis=3)
+    v_chunk = jax.lax.dynamic_slice_in_dim(new_layer_cache["v"], prefix, s, axis=3)
+    return logits, k_chunk, v_chunk
 
 
 def decode_step(

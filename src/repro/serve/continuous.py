@@ -16,17 +16,31 @@ whole run. This module replaces that with the standard serving loop:
   ``remaining`` budgets) over the paged cache from
   ``models/model.py::decode_step``.
 
+Admission runs over a CLOSED set of prefill shapes (``repro.serve.
+bucketing``): prompts pad up to a small bucket ladder, several short
+waiting prompts pack into one bucket dispatch as segment-masked rows of a
+single packed sequence, and prompts longer than the top bucket stream into
+their page chain in fixed-size chunks (``models/model.py::prefill_chunk``)
+— so total prefill compile volume is O(|buckets|), independent of the
+traffic's prompt-length mix, and :meth:`ContinuousBatchingEngine.warmup`
+AOT-compiles every shape (``jit(...).lower().compile()``) before traffic
+arrives. The static analyzer's recompile census
+(``repro.analysis.recompile``) models exactly this signature set.
+
 Decode math per request is the same prefill + masked-attention math the
 static engine runs, so greedy outputs are pinned token-for-token against
 ``ServeEngine`` on the same prompt with the same budget — including
-requests admitted mid-flight (tests/test_serve_continuous.py).
+requests admitted mid-flight and packed/chunked admissions
+(tests/test_serve_continuous.py).
 
 Host/device split: sampling, masking and the paged read/write all live in
-the one jitted step; the host loop only moves tiny per-slot flags (emitted
-tokens, the active mask) to run admission/retirement between dispatches.
+the jitted steps; the host loop only moves tiny per-slot flags (emitted
+tokens, the active mask) to run admission/retirement between dispatches,
+plus the int32 pack/chunk index maps built by ``repro.serve.bucketing``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -36,11 +50,19 @@ import numpy as np
 
 from repro.core.masking import FaultContext, healthy
 from repro.models import model as M
+from repro.serve.bucketing import (
+    DEFAULT_PREFILL_BUCKETS,
+    PackItem,
+    bucket_of,
+    build_pack,
+    chunk_step_maps,
+    plan_prefill,
+    validate_buckets,
+)
 from repro.serve.engine import make_sample_decode
 from repro.serve.kvcache import (
     DEFAULT_PAGE_SIZE,
     PageAllocator,
-    chain_layout,
     page_bytes,
     pages_needed,
 )
@@ -50,33 +72,15 @@ __all__ = [
     "RequestOutput",
     "ServeStats",
     "ContinuousBatchingEngine",
+    "shape_structs",
 ]
 
 
-def prefill_to_chain(cfg, params, tokens, ctx, *, page_size: int, chain: int):
-    """Prefill one request and lay its KV out as a page chain.
-
-    Returns ``(logits (1, V), k_chain, v_chain)`` with the chains shaped
-    ``(L, chain, Hkv, page_size, hd)`` for a one-shot pool scatter. Shared
-    by the single-chip and fleet continuous engines.
-
-    For sliding-window models whose prompt exceeds the window, prefill's
-    cache is a ring buffer holding only the last ``window`` tokens: those
-    are un-permuted back to linear order and placed at chain positions
-    ``[plen - window, plen)`` — earlier positions stay zero, which is
-    exact because the paged read path window-masks them out of every
-    future query's softmax.
-    """
-    plen = tokens.shape[1]
-    logits, dense = M.prefill(params, {"tokens": tokens}, cfg, ctx, cache_len=plen)
-    win = cfg.sliding_window
-    k, v = dense["k"], dense["v"]
-    if win and plen > win:
-        inv = jnp.asarray((np.arange(win) + plen) % win)  # undo the ring permutation
-        pad = [(0, 0), (0, 0), (0, 0), (plen - win, 0), (0, 0)]
-        k = jnp.pad(jnp.take(k, inv, axis=3), pad)
-        v = jnp.pad(jnp.take(v, inv, axis=3), pad)
-    return logits, chain_layout(k, page_size, chain), chain_layout(v, page_size, chain)
+def shape_structs(tree):
+    """ShapeDtypeStruct mirror of a pytree — AOT lowering without arrays."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), tree
+    )
 
 
 @dataclass(frozen=True)
@@ -108,6 +112,8 @@ class RequestOutput:
     admitted_step: int  # dispatch index at admission (prefill time)
     finished_step: int  # dispatch index after the final token
     finish_reason: str  # "eos" | "length"
+    queue_wait_steps: int = 0  # admitted_step - arrival (admission backpressure)
+    ttft_wall_s: float = float("nan")  # arrival seen -> first token, wall clock
 
     @property
     def ttft(self) -> int:
@@ -119,7 +125,8 @@ class RequestOutput:
 @dataclass
 class ServeStats:
     decode_dispatches: int = 0
-    prefill_dispatches: int = 0
+    prefill_dispatches: int = 0  # packed-bucket + chunk dispatches
+    chunk_dispatches: int = 0  # chunked-prefill subset of the above
     emitted_tokens: int = 0
     admitted: int = 0
     num_slots: int = 0
@@ -138,6 +145,7 @@ class ServeStats:
         return dict(
             decode_dispatches=self.decode_dispatches,
             prefill_dispatches=self.prefill_dispatches,
+            chunk_dispatches=self.chunk_dispatches,
             emitted_tokens=self.emitted_tokens,
             admitted=self.admitted,
             num_slots=self.num_slots,
@@ -172,6 +180,8 @@ class _SlotTable:
         self.outputs_admitted: dict[int, int] = {}  # rid -> admission clock
         self._tok: dict[int, list] = {}
         self._lp: dict[int, list] = {}
+        self._arrival_wall: dict[int, float] = {}  # rid -> wall time first eligible
+        self._first_tok_wall: dict[int, float] = {}
         for r in self.pending:
             need = pages_needed(len(r.tokens) + r.max_new_tokens, allocator.page_size)
             if need > max_pages_per_seq:
@@ -187,6 +197,15 @@ class _SlotTable:
 
     def next_arrival(self) -> Optional[int]:
         return self.pending[0].arrival if self.pending else None
+
+    def stamp_arrivals(self, clock: int) -> None:
+        """Record the wall time each pending request first became eligible
+        (its arrival clock was reached) — the start of its queue wait."""
+        now = time.perf_counter()
+        for r in self.pending:
+            if r.arrival > clock:
+                break  # pending is arrival-sorted
+            self._arrival_wall.setdefault(r.rid, now)
 
     def pop_admission(self, clock: int) -> Optional[tuple[int, Request, list[int]]]:
         """Admit the next arrived request into a free slot, allocating its
@@ -227,11 +246,14 @@ class _SlotTable:
         """Record one dispatch's per-slot emissions; retire newly-finished
         slots (freeing their pages). Returns the retired rids."""
         retired = []
+        now = time.perf_counter()
         for s, r in enumerate(self.slots):
             if r is None or not self.active[s]:
                 continue
             self._tok[r.rid].append(int(emitted[s]))
             self._lp[r.rid].append(float(lps[s]))
+            if len(self._tok[r.rid]) == 1:
+                self._first_tok_wall[r.rid] = now
             if not new_active[s]:
                 toks = np.asarray(self._tok.pop(r.rid))
                 # the EOS check wins even on the last budgeted token — it is
@@ -241,14 +263,19 @@ class _SlotTable:
                     if eos_id is not None and toks.size and toks[-1] == eos_id
                     else "length"
                 )
+                admitted = self.outputs_admitted[r.rid]
+                t0 = self._arrival_wall.get(r.rid)
+                t1 = self._first_tok_wall.get(r.rid)
                 self.outputs[r.rid] = RequestOutput(
                     rid=r.rid,
                     prompt=np.asarray(r.tokens),
                     tokens=toks,
                     logprobs=np.asarray(self._lp.pop(r.rid)),
-                    admitted_step=self.outputs_admitted[r.rid],
+                    admitted_step=admitted,
                     finished_step=clock,
                     finish_reason=reason,
+                    queue_wait_steps=admitted - r.arrival,
+                    ttft_wall_s=(t1 - t0) if t0 is not None and t1 is not None else float("nan"),
                 )
                 self.alloc.free(self.slot_pages[s])
                 self.slot_pages[s] = []
@@ -262,7 +289,13 @@ class _SlotTable:
 
 class ContinuousBatchingEngine:
     """Continuous batching on one chip: paged KV + slot table + one fused
-    masked decode step per token across all in-flight requests."""
+    masked decode step per token across all in-flight requests, admitted
+    through the bucketed/packed/chunked planner (``repro.serve.bucketing``).
+
+    ``prefill_buckets=None`` disables the planner (one exact-length
+    admission program per distinct prompt length — the unbucketed baseline
+    ``benchmarks/serve_bench.py --heavy-traffic`` measures against).
+    """
 
     def __init__(
         self,
@@ -275,6 +308,9 @@ class ContinuousBatchingEngine:
         num_pages: int = 128,
         max_pages_per_seq: Optional[int] = None,
         pad_id: int = 0,
+        prefill_buckets: Optional[Sequence[int]] = DEFAULT_PREFILL_BUCKETS,
+        chunk_size: Optional[int] = None,
+        max_pack: int = 4,
     ):
         if cfg.has_ssm:
             raise ValueError(
@@ -294,43 +330,176 @@ class ContinuousBatchingEngine:
         self.max_pages_per_seq = max_pages_per_seq or (num_pages - 1)
         self.pad_id = pad_id
         self._page_bytes = page_bytes(cfg, page_size)
+        if prefill_buckets is None:
+            self.prefill_buckets = None
+            self.chunk_size: Optional[int] = None
+            self.max_pack = 1
+        else:
+            self.prefill_buckets = validate_buckets(prefill_buckets)
+            self.chunk_size = int(chunk_size) if chunk_size else self.prefill_buckets[-1]
+            if self.chunk_size < page_size or self.chunk_size % page_size:
+                raise ValueError(
+                    f"chunk_size {self.chunk_size} must be a positive multiple "
+                    f"of page_size {page_size} (chunk starts must be page-aligned)"
+                )
+            if max_pack < 1:
+                raise ValueError(f"max_pack must be >= 1, got {max_pack}")
+            self.max_pack = int(max_pack)
         # every loop-carried operand (cur logits, paged cache, key, active
         # mask, remaining budgets) is re-bound from the previous dispatch's
         # outputs — donate them all so the page pool never round-trips
-        # through a copy (repro.analysis DON001); params/ctx/eos are reused
-        # across dispatches and must stay undonated
+        # through a copy (repro.analysis DON001); params/ctx/eos and the
+        # host-built pack/chunk index maps are reused or rebuilt per call
+        # and stay undonated
         self._sample_decode = jax.jit(
             make_sample_decode(cfg, pad_id=pad_id), donate_argnums=(1, 2, 3, 6, 8)
         )
-        self._prefill_admit = jax.jit(
-            self._prefill_admit_fn,
-            static_argnames=("chain",),
-            donate_argnums=(3, 4, 5, 6),
+        self._packed_admit = jax.jit(
+            self._packed_admit_fn, donate_argnums=(5, 6, 7, 8)
         )
+        self._prefill_chunk = jax.jit(
+            self._prefill_chunk_fn, donate_argnums=(3, 4, 5, 6)
+        )
+        # AOT-compiled executables by program key — see warmup(); dispatch
+        # prefers these, falling back to the jit wrappers above (whose
+        # _cache_size() then counts traffic-time compiles)
+        self._aot: dict = {}
+        self.used_programs: set = set()
 
     # -- jitted pieces ------------------------------------------------------
 
-    def _prefill_admit_fn(
-        self, params, tokens, ctx, cache, cur, active, remaining, slot, pids, budget, *, chain
+    def _packed_admit_fn(
+        self, params, tokens, positions, segments, ctx, cache, cur, active,
+        remaining, page_ix, page_off, gather_pos, slots, rows, seq_lens, budgets,
     ):
-        """Prefill one request and splice it into the slot table: scatter its
-        KV chain into the pool pages, write its block-table row, seed its
-        logits/budget — one dispatch per admission."""
-        plen = tokens.shape[1]
-        logits, kc, vc = prefill_to_chain(
-            self.cfg, params, tokens, ctx, page_size=self.page_size, chain=chain
+        """Admit a PACK of requests in one bucket-shaped dispatch: run the
+        segment-masked prefill over the packed row, scatter every token's KV
+        into its request's page chain (pad tokens hit the scratch page 0),
+        gather each segment's last-token hidden state for its first logits,
+        and splice per-slot state (unused pack lanes scatter out-of-bounds
+        at ``slot == num_slots`` and are dropped). One compiled program per
+        bucket, independent of pack occupancy and prompt lengths."""
+        hidden, dense = M.prefill(
+            params, {"tokens": tokens, "positions": positions}, self.cfg, ctx,
+            full_kv=True, return_hidden=True, segments=segments, attn_impl="dense",
         )
-        row = jnp.zeros((self.max_pages_per_seq,), jnp.int32).at[:chain].set(pids)
+        # (L, 1, Hkv, W, hd) -> (W, L, Hkv, hd): the advanced indices
+        # (page_ix, page_off) around the Hkv slice put the token dim first
+        k = jnp.transpose(dense["k"][:, 0], (2, 0, 1, 3))
+        v = jnp.transpose(dense["v"][:, 0], (2, 0, 1, 3))
+        kp = cache["k_pages"].at[:, page_ix, :, page_off].set(k.astype(cache["k_pages"].dtype))
+        vp = cache["v_pages"].at[:, page_ix, :, page_off].set(v.astype(cache["v_pages"].dtype))
+        h = hidden[0, gather_pos]  # (max_pack, d) — one last-token row per segment
+        logits = M.unembed(self.cfg, params, h[None], ctx)[0]  # (max_pack, V)
         cache = dict(
-            k_pages=cache["k_pages"].at[:, pids].set(kc.astype(cache["k_pages"].dtype)),
-            v_pages=cache["v_pages"].at[:, pids].set(vc.astype(cache["v_pages"].dtype)),
-            block_tables=cache["block_tables"].at[slot].set(row),
-            seq_lens=cache["seq_lens"].at[slot].set(plen),
+            k_pages=kp,
+            v_pages=vp,
+            block_tables=cache["block_tables"].at[slots].set(rows),
+            seq_lens=cache["seq_lens"].at[slots].set(seq_lens),
         )
-        cur = cur.at[slot].set(logits[0].astype(cur.dtype))
-        active = active.at[slot].set(True)
-        remaining = remaining.at[slot].set(budget)
+        cur = cur.at[slots].set(logits.astype(cur.dtype))
+        active = active.at[slots].set(True)
+        remaining = remaining.at[slots].set(budgets)
         return cache, cur, active, remaining
+
+    def _prefill_chunk_fn(
+        self, params, tokens, ctx, cache, cur, active, remaining,
+        slot, row, page_ix, page_off, prefix, valid, budget, activate,
+    ):
+        """One chunk of a long prompt: continue against the slot's paged
+        prefix (``models/model.py::prefill_chunk``), scatter the chunk's KV
+        into the chain, and — on the final chunk (``activate``) — seed the
+        slot's logits/budget and flip it live. Prefix/valid are traced, so
+        every chunk of every prompt shares one compiled program."""
+        logits, kc, vc = M.prefill_chunk(
+            params, tokens, self.cfg, ctx,
+            k_pages=cache["k_pages"], v_pages=cache["v_pages"], row=row,
+            prefix_len=prefix, valid_len=valid,
+        )
+        k = jnp.transpose(kc[:, 0], (2, 0, 1, 3))
+        v = jnp.transpose(vc[:, 0], (2, 0, 1, 3))
+        new_len = jnp.where(activate, prefix + valid, cache["seq_lens"][slot])
+        cache = dict(
+            k_pages=cache["k_pages"].at[:, page_ix, :, page_off].set(k.astype(cache["k_pages"].dtype)),
+            v_pages=cache["v_pages"].at[:, page_ix, :, page_off].set(v.astype(cache["v_pages"].dtype)),
+            block_tables=cache["block_tables"].at[slot].set(row),
+            seq_lens=cache["seq_lens"].at[slot].set(new_len),
+        )
+        cur = cur.at[slot].set(jnp.where(activate, logits[0].astype(cur.dtype), cur[slot]))
+        active = active.at[slot].set(active[slot] | activate)
+        remaining = remaining.at[slot].set(jnp.where(activate, budget, remaining[slot]))
+        return cache, cur, active, remaining
+
+    # -- AOT warmup ---------------------------------------------------------
+
+    def _state_structs(self):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        L, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        pool = jax.ShapeDtypeStruct((L, self.num_pages, hkv, self.page_size, hd), dtype)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        cache = dict(
+            k_pages=pool, v_pages=pool,
+            block_tables=i32(self.num_slots, self.max_pages_per_seq),
+            seq_lens=i32(self.num_slots),
+        )
+        cur = jax.ShapeDtypeStruct((self.num_slots, cfg.vocab_size), dtype)
+        active = jax.ShapeDtypeStruct((self.num_slots,), jnp.bool_)
+        remaining = i32(self.num_slots)
+        return cache, cur, active, remaining
+
+    def warmup(self) -> int:
+        """AOT-precompile the closed program set before traffic arrives:
+        one packed-admit program per bucket, the chunk program, and the
+        fused decode step — ``jit(...).lower().compile()`` each, stored as
+        executables the serve loop dispatches through directly. After
+        warmup, traffic-time jit compiles (``compile_counts()``'s
+        ``jit_fallback``) stay at zero. Returns the AOT program count."""
+        if self.prefill_buckets is None:
+            raise ValueError("warmup() needs bucketed prefill; prefill_buckets is None")
+        params_s = shape_structs(self.params)
+        ctx_s = shape_structs(self.ctx)
+        cache, cur, active, remaining = self._state_structs()
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        K, maxp = self.max_pack, self.max_pages_per_seq
+        for w in self.prefill_buckets:
+            key = ("prefill_admit", w)
+            if key not in self._aot:
+                self._aot[key] = self._packed_admit.lower(
+                    params_s, i32(1, w), i32(1, w), i32(1, w), ctx_s,
+                    cache, cur, active, remaining,
+                    i32(w), i32(w), i32(K), i32(K), i32(K, maxp), i32(K), i32(K),
+                ).compile()
+        c = self.chunk_size
+        key = ("prefill_chunk", c)
+        if key not in self._aot:
+            self._aot[key] = self._prefill_chunk.lower(
+                params_s, i32(1, c), ctx_s, cache, cur, active, remaining,
+                i32(), i32(maxp), i32(c), i32(c), i32(), i32(), i32(),
+                jax.ShapeDtypeStruct((), jnp.bool_),
+            ).compile()
+        key = ("decode",)
+        if key not in self._aot:
+            self._aot[key] = self._sample_decode.lower(
+                params_s, cur, cache, shape_structs(jax.random.PRNGKey(0)), ctx_s,
+                jax.ShapeDtypeStruct((), jnp.float32), active, i32(), remaining,
+            ).compile()
+        return len(self._aot)
+
+    def compile_counts(self) -> dict:
+        """Compile accounting: AOT executables (warmup), traffic-time jit
+        fallback compiles, and the program keys actually dispatched."""
+        jit_fallback = (
+            self._packed_admit._cache_size()
+            + self._prefill_chunk._cache_size()
+            + self._sample_decode._cache_size()
+        )
+        return dict(
+            aot=len(self._aot),
+            jit_fallback=jit_fallback,
+            total=len(self._aot) + jit_fallback,
+            used=sorted(map(str, self.used_programs)),
+        )
 
     # -- the serve loop -----------------------------------------------------
 
@@ -343,7 +512,8 @@ class ContinuousBatchingEngine:
         key: Optional[jax.Array] = None,
     ) -> tuple[dict[int, RequestOutput], ServeStats]:
         """Serve a request stream to completion. Returns (outputs by rid,
-        stats). Outputs include per-request TTFT and finish reason."""
+        stats). Outputs include per-request TTFT, queue wait and finish
+        reason."""
         if not requests:
             return {}, ServeStats(num_slots=self.num_slots, page_size=self.page_size)
         alloc = PageAllocator(self.num_pages, self.page_size)
@@ -362,30 +532,88 @@ class ContinuousBatchingEngine:
         key = key if key is not None else jax.random.PRNGKey(0)
         temp = jnp.float32(temperature)
         eos = jnp.asarray(-1 if eos_id is None else eos_id, jnp.int32)
+        buckets = self.prefill_buckets
+        top = buckets[-1] if buckets else None
+        pack: list[PackItem] = []
+
+        def flush_pack():
+            nonlocal cache, cur, active, remaining
+            if not pack:
+                return
+            total = sum(len(it.tokens) for it in pack)
+            width = total if buckets is None else bucket_of(total, buckets)
+            arrays = build_pack(
+                pack, bucket=width, max_pack=self.max_pack,
+                page_size=self.page_size, max_pages_per_seq=self.max_pages_per_seq,
+                num_slots=self.num_slots, pad_id=self.pad_id,
+            )
+            pkey = ("prefill_admit", width)
+            fn = self._aot.get(pkey, self._packed_admit)
+            cache, cur, active, remaining = fn(
+                self.params, arrays["tokens"], arrays["positions"],
+                arrays["segments"], self.ctx, cache, cur, active, remaining,
+                arrays["page_ix"], arrays["page_off"], arrays["gather_pos"],
+                arrays["slots"], arrays["rows"], arrays["seq_lens"],
+                arrays["budgets"],
+            )
+            self.used_programs.add(pkey)
+            stats.prefill_dispatches += 1
+            pack.clear()
+
+        def run_chunks(slot, r, pages):
+            nonlocal cache, cur, active, remaining
+            steps = plan_prefill(
+                len(r.tokens), buckets=buckets, chunk_size=self.chunk_size
+            )
+            toks = np.asarray(r.tokens, np.int32)
+            row = np.zeros((self.max_pages_per_seq,), np.int32)
+            row[: len(pages)] = pages
+            for st in steps:
+                maps = chunk_step_maps(st, pages, page_size=self.page_size)
+                ct = np.full((st.size,), self.pad_id, np.int32)
+                ct[: st.valid] = toks[st.start : st.start + st.valid]
+                ckey = ("prefill_chunk", st.size)
+                fn = self._aot.get(ckey, self._prefill_chunk)
+                cache, cur, active, remaining = fn(
+                    self.params, ct[None], self.ctx, cache, cur, active,
+                    remaining, np.int32(slot), row, maps["page_ix"],
+                    maps["page_off"], np.int32(st.start), np.int32(st.valid),
+                    np.int32(r.max_new_tokens), np.bool_(st.final),
+                )
+                self.used_programs.add(ckey)
+                stats.prefill_dispatches += 1
+                stats.chunk_dispatches += 1
 
         clock = 0  # decode-dispatch index
         while not table.done:
-            # admissions: fill free slots with every arrived request we can
+            table.stamp_arrivals(clock)
+            # admissions: fill free slots with every arrived request we can,
+            # packing short prompts into shared bucket dispatches
             while True:
                 adm = table.pop_admission(clock)
                 if adm is None:
                     break
                 slot, r, pages = adm
-                cache, cur, active, remaining = self._prefill_admit(
-                    self.params,
-                    jnp.asarray(r.tokens, jnp.int32)[None],
-                    self.ctx, cache, cur, active, remaining,
-                    jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(pages, jnp.int32),
-                    jnp.asarray(r.max_new_tokens, jnp.int32),
-                    chain=len(pages),
-                )
                 table.outputs_admitted[r.rid] = clock
-                stats.prefill_dispatches += 1
                 stats.admitted += 1
-                stats.peak_resident_kv_bytes = max(
-                    stats.peak_resident_kv_bytes, alloc.pages_in_use * self._page_bytes
+                plen = len(r.tokens)
+                if top is not None and plen > top:
+                    flush_pack()
+                    run_chunks(slot, r, pages)
+                    continue
+                if pack and (
+                    len(pack) >= self.max_pack
+                    or (top is not None and sum(len(i.tokens) for i in pack) + plen > top)
+                ):
+                    flush_pack()
+                pack.append(
+                    PackItem(np.asarray(r.tokens, np.int32), slot, tuple(pages),
+                             r.max_new_tokens)
                 )
+            flush_pack()
+            stats.peak_resident_kv_bytes = max(
+                stats.peak_resident_kv_bytes, alloc.pages_in_use * self._page_bytes
+            )
             if not table.active.any():
                 # idle: jump the clock to the next arrival (no dispatches)
                 nxt = table.next_arrival()
@@ -394,9 +622,11 @@ class ContinuousBatchingEngine:
                 continue
 
             n_active = int(table.active.sum())
-            emitted, tok_lp, cur, cache, key, active, remaining = self._sample_decode(
+            dfn = self._aot.get(("decode",), self._sample_decode)
+            emitted, tok_lp, cur, cache, key, active, remaining = dfn(
                 self.params, cur, cache, key, self.ctx, temp, active, eos, remaining
             )
+            self.used_programs.add(("decode",))
             clock += 1
             stats.decode_dispatches += 1
             stats.emitted_tokens += n_active

@@ -29,6 +29,11 @@ import jax.numpy as jnp
 
 from repro.core.masking import FaultContext, healthy
 from repro.models import model as M
+from repro.serve.bucketing import (
+    DEFAULT_PREFILL_BUCKETS,
+    ladder_rung,
+    validate_buckets,
+)
 from repro.serve.kvcache import DEFAULT_PAGE_SIZE, round_up_to_page
 
 
@@ -94,8 +99,18 @@ class ServeEngine:
     """Static-batch serving: one rectangular prompt batch, N decode steps.
 
     ``max_len`` is the KV capacity. ``max_len=None`` derives it per
-    ``generate`` call as ``prompt_len + max_new_tokens`` rounded up to
-    ``page_size`` — explicit capacity instead of a 4096-slot default.
+    ``generate`` call as ``prompt_len + max_new_tokens`` rounded up the
+    bucket ladder — explicit capacity instead of a 4096-slot default.
+
+    Prompt widths are BUCKETED (``repro.serve.bucketing``): ``generate``
+    pads the prompt up to the smallest ladder rung that holds it and runs
+    prefill with a *traced* ``valid_len``, so the compiled prefill program
+    set is one program per (rung, capacity) pair instead of one per
+    distinct prompt length — the ``RCP001:serve.prefill:prompt_len`` hazard
+    the static analyzer used to baseline. ``prefill_buckets=None`` restores
+    the exact-length behaviour; non-causal families (SSM state scans,
+    encoders) always take the exact path since pad tokens would corrupt
+    their state.
     """
 
     def __init__(
@@ -107,6 +122,7 @@ class ServeEngine:
         max_len: Optional[int] = 4096,
         page_size: int = DEFAULT_PAGE_SIZE,
         pad_id: int = 0,
+        prefill_buckets=DEFAULT_PREFILL_BUCKETS,
     ):
         self.cfg = cfg
         self.params = params
@@ -114,8 +130,14 @@ class ServeEngine:
         self.max_len = max_len
         self.page_size = page_size
         self.pad_id = pad_id
+        if prefill_buckets is not None and not (cfg.has_ssm or cfg.is_encoder):
+            self.prefill_buckets = validate_buckets(prefill_buckets)
+        else:
+            self.prefill_buckets = None
         self._prefill_len = jax.jit(
-            lambda p, b, ctx, cache_len: M.prefill(p, b, cfg, ctx, cache_len=cache_len),
+            lambda p, b, ctx, cache_len, valid_len=None: M.prefill(
+                p, b, cfg, ctx, cache_len=cache_len, valid_len=valid_len
+            ),
             static_argnums=3,
         )
         self._prefill = self._prefill_fixed_len
@@ -144,10 +166,15 @@ class ServeEngine:
         return self._prefill_len(p, b, ctx, self.max_len)
 
     def cache_len_for(self, prompt_len: int, max_new_tokens: int) -> int:
-        """KV capacity one generate call needs (page-size rounded)."""
+        """KV capacity one generate call needs. Bucketed engines quantize it
+        up the (doubling-extended) ladder so capacity, like prompt width,
+        draws from a closed set; unbucketed engines round to the page."""
         if self.max_len is not None:
             return self.max_len
-        return round_up_to_page(prompt_len + max_new_tokens, self.page_size)
+        need = prompt_len + max_new_tokens
+        if self.prefill_buckets is not None:
+            return ladder_rung(need, self.prefill_buckets)
+        return round_up_to_page(need, self.page_size)
 
     def generate(
         self,
@@ -158,10 +185,31 @@ class ServeEngine:
         key: Optional[jax.Array] = None,
         eos_id: Optional[int] = None,
     ) -> GenerateResult:
-        cache_len = self.cache_len_for(prompts.shape[1], max_new_tokens)
-        logits, cache = self._prefill_len(
-            self.params, {"tokens": prompts}, self.ctx, cache_len
-        )
+        plen = prompts.shape[1]
+        cache_len = self.cache_len_for(plen, max_new_tokens)
+        if self.prefill_buckets is not None:
+            # pad the prompt up to its ladder rung (never past capacity) and
+            # trace the real length: one compiled prefill per (rung,
+            # capacity) pair regardless of the traffic's prompt lengths
+            width = min(ladder_rung(plen, self.prefill_buckets), cache_len)
+            padded = prompts
+            if width > plen:
+                padded = jnp.concatenate(
+                    [
+                        prompts,
+                        jnp.full((prompts.shape[0], width - plen), self.pad_id,
+                                 prompts.dtype),
+                    ],
+                    axis=1,
+                )
+            logits, cache = self._prefill_len(
+                self.params, {"tokens": padded}, self.ctx, cache_len,
+                jnp.int32(plen),
+            )
+        else:
+            logits, cache = self._prefill_len(
+                self.params, {"tokens": prompts}, self.ctx, cache_len
+            )
         toks = [prompts]
         lps = []
         cur = logits

@@ -327,6 +327,102 @@ def test_continuous_sliding_window_prompt_longer_than_window(served_model):
         ), r.rid
 
 
+def test_bucketed_chunked_prefill_greedy_parity(served_model):
+    """The tentpole contract: admission through the bucketed planner —
+    padded buckets, packed short prompts, chunked long prompts, mid-flight
+    admissions into freed slots — changes NOTHING about greedy outputs.
+    Every request matches a per-request ServeEngine run token-for-token,
+    and after AOT warmup the whole run compiles zero programs at traffic
+    time (|buckets| + chunk + decode, nothing else)."""
+    cfg, params = served_model
+    buckets = (8, 16)
+    eng = ContinuousBatchingEngine(
+        cfg, params, num_slots=2, page_size=4, num_pages=64,
+        prefill_buckets=buckets, chunk_size=8, max_pack=2,
+    )
+    assert eng.warmup() == len(buckets) + 2
+    reqs = [
+        Request(0, _prompt(cfg, 60, 6), max_new_tokens=5),
+        Request(1, _prompt(cfg, 61, 13), max_new_tokens=4),
+        Request(2, _prompt(cfg, 62, 40), max_new_tokens=6),  # 5 chunks of 8
+        Request(3, _prompt(cfg, 63, 3), max_new_tokens=5, arrival=2),  # mid-flight
+        Request(4, _prompt(cfg, 64, 5), max_new_tokens=4),
+    ]
+    outs, stats = eng.serve(reqs)
+    assert stats.admitted == 5 and stats.chunk_dispatches == 5
+    cc = eng.compile_counts()
+    assert cc["jit_fallback"] == 0 and cc["aot"] == len(buckets) + 2
+    ref = ServeEngine(cfg, params, max_len=None, page_size=4)
+    for r in reqs:
+        res = ref.generate(jnp.asarray(r.tokens)[None], max_new_tokens=r.max_new_tokens)
+        assert np.array_equal(
+            outs[r.rid].tokens, np.asarray(res.tokens[0, len(r.tokens):])
+        ), r.rid
+        assert outs[r.rid].queue_wait_steps >= 0
+        assert np.isfinite(outs[r.rid].ttft_wall_s)
+
+
+def test_swa_prompt_spanning_chunk_boundary():
+    """Chunked prefill must reproduce the sliding-window math exactly when a
+    prompt longer than the window streams in across chunk boundaries (each
+    chunk re-reads the paged prefix, including tokens the window has slid
+    past). Dense FFN + window: capacity-MoE routing is dispatch-width-
+    dependent by construction (``moe_block`` computes expert capacity per
+    dispatch), so chunk-vs-one-shot bit-parity is only defined for dense
+    families — see serve/README.md."""
+    from dataclasses import replace
+
+    cfg = replace(reduce_config(get_arch("smollm-135m")), sliding_window=16)
+    params, _ = M.init_params(cfg, KEY)
+    eng = ContinuousBatchingEngine(
+        cfg, params, num_slots=2, page_size=8, num_pages=32,
+        prefill_buckets=(8, 16), chunk_size=8,
+    )
+    reqs = [
+        Request(0, _prompt(cfg, 82, 40), max_new_tokens=6),  # prompt > window
+        Request(1, _prompt(cfg, 83, 12), max_new_tokens=8),
+    ]
+    outs, stats = eng.serve(reqs)
+    assert stats.chunk_dispatches == 5  # the 40-token prompt, 8 at a time
+    ref_eng = ServeEngine(cfg, params, max_len=None, page_size=8)
+    for r in reqs:
+        ref = ref_eng.generate(jnp.asarray(r.tokens)[None], max_new_tokens=r.max_new_tokens)
+        assert np.array_equal(
+            outs[r.rid].tokens, np.asarray(ref.tokens[0, len(r.tokens):])
+        ), r.rid
+
+
+def test_packed_admission_burst(served_model):
+    """A burst of short prompts arriving together shares bucket dispatches
+    (segment-masked packing) instead of serializing one prefill each — and
+    still matches per-request ServeEngine outputs."""
+    cfg, params = served_model
+    eng = ContinuousBatchingEngine(
+        cfg, params, num_slots=4, page_size=4, num_pages=64,
+        prefill_buckets=(16, 32), max_pack=4,
+    )
+    reqs = [Request(i, _prompt(cfg, 70 + i, 3 + i), max_new_tokens=4) for i in range(4)]
+    outs, stats = eng.serve(reqs)
+    assert stats.admitted == 4
+    assert stats.prefill_dispatches < 4  # the burst actually packed
+    ref = ServeEngine(cfg, params, max_len=None, page_size=4)
+    for r in reqs:
+        res = ref.generate(jnp.asarray(r.tokens)[None], max_new_tokens=r.max_new_tokens)
+        assert np.array_equal(
+            outs[r.rid].tokens, np.asarray(res.tokens[0, len(r.tokens):])
+        ), r.rid
+
+
+def test_serve_engine_bucketed_prefill_program_count(served_model):
+    """Distinct prompt lengths within one ladder rung share ONE compiled
+    prefill program (the RCP001:serve.prefill:prompt_len fix)."""
+    cfg, params = served_model
+    eng = ServeEngine(cfg, params, max_len=64)
+    for plen in (3, 5, 9, 20):
+        eng.generate(jnp.asarray(_prompt(cfg, 95 + plen, plen))[None], max_new_tokens=2)
+    assert eng._prefill_len._cache_size() == 1
+
+
 def test_continuous_eos_on_last_budgeted_token_reports_eos(served_model):
     """A request whose final budgeted token IS the EOS retires via the EOS
     check on the device — finish_reason must say so."""
@@ -407,8 +503,12 @@ def test_static_and_continuous_agree_on_eos(served_model):
 def test_serve_engine_derives_cache_len(served_model):
     cfg, params = served_model
     eng = ServeEngine(cfg, params, max_len=None, page_size=8)
-    assert eng.cache_len_for(6, 5) == 16  # 11 tokens -> 2 pages
-    assert eng.cache_len_for(8, 8) == 16
+    assert eng.cache_len_for(6, 5) == 32  # 11 tokens -> bottom ladder rung
+    assert eng.cache_len_for(8, 8) == 32
+    assert eng.cache_len_for(200, 100) == 512  # past the top bucket: doubled rung
+    unbucketed = ServeEngine(cfg, params, max_len=None, page_size=8,
+                             prefill_buckets=None)
+    assert unbucketed.cache_len_for(6, 5) == 16  # 11 tokens -> 2 pages
     fixed = ServeEngine(cfg, params, max_len=48)
     assert fixed.cache_len_for(6, 5) == 48
     prompts = jnp.stack([jnp.asarray(_prompt(cfg, 70 + b, 6)) for b in range(2)])
