@@ -13,7 +13,13 @@ chip's traffic — and greedy decoding still reproduces a per-chip
 Force a multi-device CPU mesh to see real sharding:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-        PYTHONPATH=src python examples/fleet_serve.py [--chips 4]
+        PYTHONPATH=src python examples/fleet_serve.py [--chips 4] \
+        [--trace-out fleet.trace.json] [--metrics-out fleet.jsonl]
+
+``--trace-out`` writes a Chrome trace of the fleet run — one Perfetto
+swimlane per chip slot plus per-chip page-pool counters; ``--metrics-out``
+writes the JSONL event+metrics log (``python -m repro.launch.obs`` converts
+or summarizes it).
 """
 import argparse
 import time
@@ -35,6 +41,10 @@ from repro.train.step import make_train_step
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the fleet run's Chrome trace")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the fleet run's JSONL event+metrics log")
     args = ap.parse_args()
 
     cfg = reduce_config(get_arch("qwen3-0.6b"))
@@ -74,10 +84,15 @@ def main():
 
     streams = [stream_for(c) for c in range(args.chips)]
 
+    rec = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Recorder
+
+        rec = Recorder()
     t0 = time.time()
     fleet_eng = ShardedFleetServeEngine(
         cfg, [p for p, _, _ in chips], [c for _, c, _ in chips],
-        num_slots=2, page_size=8, num_pages=64,
+        num_slots=2, page_size=8, num_pages=64, recorder=rec,
     )
     outs, stats = fleet_eng.serve(streams)
     t_fleet = time.time() - t0
@@ -112,6 +127,19 @@ def main():
             f"  chip {c}: fault_rate={rate:.2f} requests={len(o)} "
             f"ttft(rid0)={lead.ttft} continuation={lead.tokens.tolist()}"
         )
+
+    if args.trace_out:
+        from repro.obs import write_chrome_trace
+
+        tr = write_chrome_trace(args.trace_out, rec)
+        print(f"trace: {args.trace_out} ({len(tr['traceEvents'])} events — "
+              f"one Perfetto lane per chip slot)")
+    if args.metrics_out:
+        from repro.obs import write_jsonl
+
+        write_jsonl(args.metrics_out, rec)
+        print(f"metrics: {args.metrics_out} ({len(rec.event_list())} events, "
+              f"recorder self time {rec.self_time_s*1e3:.2f} ms)")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.masking import FaultContext, healthy, stack_contexts
 from repro.launch.mesh import make_pop_mesh
 from repro.models import model as M
+from repro.obs.hooks import PoolMonitor, RequestTracer
+from repro.obs.recorder import NULL_RECORDER, Recorder
 from repro.serve.bucketing import (
     DEFAULT_PREFILL_BUCKETS,
     PackItem,
@@ -183,6 +185,7 @@ class ShardedFleetServeEngine:
         prefill_buckets=DEFAULT_PREFILL_BUCKETS,
         chunk_size: Optional[int] = None,
         max_pack: int = 4,
+        recorder: Optional[Recorder] = None,
     ):
         n = len(params_list)
         if n == 0:
@@ -236,6 +239,10 @@ class ShardedFleetServeEngine:
             if max_pack < 1:
                 raise ValueError(f"max_pack must be >= 1, got {max_pack}")
             self.max_pack = int(max_pack)
+        # host-side observability; one track per chip (chip{c}/slot{s},
+        # chip{c}/pages) so Perfetto draws the fleet as per-chip swimlanes.
+        # All hooks sit at dispatch boundaries outside traced code.
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         self._page_bytes = page_bytes(cfg, page_size)
         self.params_list = list(params_list)
         self.ctxs = [c or healthy() for c in ctxs]
@@ -381,6 +388,17 @@ class ShardedFleetServeEngine:
             _SlotTable(list(s), self.num_slots, allocs[c], self.max_pages_per_seq)
             for c, s in enumerate(streams)
         ]
+        rec = self.obs
+        tracers = [
+            RequestTracer(rec, proc="fleet", track_prefix=f"chip{c}/")
+            for c in range(self.num_chips)
+        ]
+        fleet_tracer = RequestTracer(rec, proc="fleet")
+        pools = [
+            PoolMonitor(rec, allocs[c], proc="fleet", track=f"chip{c}/pages",
+                        name_prefix=f"kv.chip{c}.")
+            for c in range(self.num_chips)
+        ]
 
         N, S, V = self.num_chips, self.num_slots, self.cfg.vocab_size
         dtype = jnp.dtype(self.cfg.dtype)
@@ -412,6 +430,7 @@ class ShardedFleetServeEngine:
                 page_size=self.page_size, max_pages_per_seq=self.max_pages_per_seq,
                 num_slots=self.num_slots, pad_id=self.pad_id,
             )
+            t0 = rec.now() if rec else 0.0
             cache, cur, active, remaining = self._packed_admit(
                 self.params_list[c], arrays["tokens"], arrays["positions"],
                 arrays["segments"], self.ctxs[c], cache, cur, active, remaining,
@@ -420,6 +439,15 @@ class ShardedFleetServeEngine:
                 arrays["seq_lens"], arrays["budgets"],
             )
             stats.prefill_dispatches += 1
+            if rec:
+                jax.block_until_ready(cur)
+                t1 = rec.now()
+                for it in pack:
+                    tracers[c].admitted(
+                        it.rid, it.slot, t0, t1,
+                        args=dict(bucket=width, packed=len(pack), chip=c,
+                                  prompt_len=len(it.tokens)),
+                    )
             pack.clear()
 
         def run_chunks(c, slot, r, pages):
@@ -434,6 +462,7 @@ class ShardedFleetServeEngine:
                 maps = chunk_step_maps(st, pages, page_size=self.page_size)
                 ct = np.full((st.size,), self.pad_id, np.int32)
                 ct[: st.valid] = toks[st.start : st.start + st.valid]
+                t0 = rec.now() if rec else 0.0
                 cache, cur, active, remaining = self._prefill_chunk(
                     self.params_list[c], ct[None], self.ctxs[c], cache, cur,
                     active, remaining, np.int32(c), np.int32(slot), row,
@@ -443,6 +472,12 @@ class ShardedFleetServeEngine:
                 )
                 stats.prefill_dispatches += 1
                 stats.chunk_dispatches += 1
+                if rec:
+                    jax.block_until_ready(cur)
+                    tracers[c].chunk(
+                        r.rid, slot, t0, rec.now(), final=st.final,
+                        args=dict(size=st.size, start=st.start, valid=st.valid),
+                    )
 
         clock = 0
         while not all(t.done for t in tables):
@@ -476,6 +511,8 @@ class ShardedFleetServeEngine:
             stats.peak_resident_kv_bytes = max(
                 stats.peak_resident_kv_bytes, pages_in_use * self._page_bytes
             )
+            for p in pools:
+                p.sample()
             if not any(t.active.any() for t in tables):
                 arrivals = [t.next_arrival() for t in tables if t.next_arrival() is not None]
                 assert arrivals, "no active slots and no pending arrivals"
@@ -486,6 +523,7 @@ class ShardedFleetServeEngine:
             args = (self.params, cur, cache, keys)
             if self.ctx.ok is not None:
                 args += (self.ctx.ok,)
+            t0 = rec.now() if rec else 0.0
             emitted, tok_lp, cur, cache, keys, active, remaining = self._step(
                 *args, temp, eos, active, remaining
             )
@@ -494,11 +532,25 @@ class ShardedFleetServeEngine:
             stats.emitted_tokens += n_active
             stats.active_slot_steps += n_active
             stats.kv_byte_steps += pages_in_use * self._page_bytes
-            em = np.asarray(emitted)
+            em = np.asarray(emitted)  # forces the fused dispatch to completion
             lp = np.asarray(tok_lp)
             ac = np.asarray(active)
+            if rec:
+                t1 = rec.now()
+                fleet_tracer.decode_dispatch(t0, t1, n_active=n_active, clock=clock)
             for c, table in enumerate(tables):
-                table.record_step(em[c], lp[c], ac[c], clock, eos_id=eos_id)
+                if rec:
+                    slot_of = {r.rid: s for s, r in enumerate(table.slots)
+                               if r is not None}
+                retired = table.record_step(em[c], lp[c], ac[c], clock, eos_id=eos_id)
+                if rec and retired:
+                    t1 = rec.now()
+                    for rid in retired:
+                        tracers[c].retired(table.outputs[rid], slot_of[rid], t1)
+                    pools[c].sample()
         # peak residency is exact from the per-round samples: pages only
         # grow at admission (sampled) and shrink at retirement
+        if rec:
+            rec.instant("serve.end", proc="fleet", track="engine",
+                        args=dict(chips=self.num_chips, **stats.as_dict()))
         return [t.outputs for t in tables], stats

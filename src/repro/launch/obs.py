@@ -1,0 +1,159 @@
+"""Observability CLI: self-check, log conversion, and log summaries.
+
+Works entirely on the pure-python :mod:`repro.obs` layer — no JAX import,
+no model, no devices — so the analysis CI job can gate on ``--check`` in
+milliseconds:
+
+* ``--check`` — exercise the recorder end to end in-process (spans /
+  instants / samples / metrics, ring wraparound, JSONL round-trip, Chrome
+  export + schema validation) and exit 0 iff everything holds. This is the
+  canary that the exporters CI later feeds real serve traces through are
+  self-consistent.
+* ``--convert IN.jsonl --trace-out OUT.json`` — re-export a saved JSONL
+  event log (``--metrics-out`` from the serve CLIs / benches) as a Chrome
+  trace viewable in https://ui.perfetto.dev.
+* ``--summary IN.jsonl`` — print a log's meta line, event-kind counts and
+  metric aggregates as JSON.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.obs --check
+    PYTHONPATH=src python -m repro.launch.obs --convert run.jsonl --trace-out run.trace.json
+    PYTHONPATH=src python -m repro.launch.obs --summary run.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def _self_check() -> list[str]:
+    """Run the in-process smoke; returns problems (empty == healthy)."""
+    from repro.obs import (
+        NULL_RECORDER,
+        Recorder,
+        RingBuffer,
+        chrome_trace,
+        read_jsonl,
+        validate_chrome_trace,
+        write_jsonl,
+    )
+    from repro.obs.metrics import TTFT_BUCKETS_S
+
+    problems: list[str] = []
+
+    # ring wraparound: bounded, oldest-first, dropped accounted
+    rb = RingBuffer(4)
+    for i in range(10):
+        rb.append(i)
+    if list(rb) != [6, 7, 8, 9] or rb.dropped != 6:
+        problems.append(f"ring wraparound broken: {list(rb)} dropped={rb.dropped}")
+
+    # null recorder: falsy, un-enableable
+    if NULL_RECORDER:
+        problems.append("NULL_RECORDER is truthy")
+    try:
+        NULL_RECORDER.enabled = True
+        problems.append("NULL_RECORDER accepted enable")
+    except AttributeError:
+        pass
+
+    # record one of everything, export both ways, validate, round-trip
+    rec = Recorder(capacity=64)
+    t0 = rec.now()
+    rec.span("admit", proc="serve", track="slot0", t0=t0, t1=t0 + 0.01,
+             args=dict(rid=0))
+    rec.span("decode", proc="serve", track="slot0", t0=t0 + 0.01, t1=t0 + 0.05,
+             args=dict(rid=0, tokens=4))
+    rec.instant("retire", proc="serve", track="slot0", args=dict(rid=0))
+    rec.sample("kv.free_pages", 7, proc="serve", track="pages")
+    rec.count("serve.tokens_emitted", 4)
+    rec.observe("serve.ttft_wall_s", 0.012, TTFT_BUCKETS_S)
+    rec.gauge_set("serve.compiles.total", 2)
+
+    trace = chrome_trace(rec)
+    problems += validate_chrome_trace(trace)
+
+    h = rec.summary()["metrics"].get("serve.ttft_wall_s")
+    if not h or h["count"] != 1 or not (0.01 <= h["p50"] <= 0.025):
+        problems.append(f"histogram aggregate wrong: {h}")
+
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        write_jsonl(path, rec)
+        back = read_jsonl(path)
+        if len(back["events"]) != len(rec.event_list()):
+            problems.append(
+                f"jsonl round-trip lost events: {len(back['events'])} "
+                f"!= {len(rec.event_list())}"
+            )
+        if back["events"] != rec.event_list():
+            problems.append("jsonl round-trip changed event content")
+        round_trip = chrome_trace(back["events"])
+        problems += [f"re-exported: {p}" for p in validate_chrome_trace(round_trip)]
+    finally:
+        os.unlink(path)
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="run the recorder/exporter self-check; exit 1 on failure")
+    ap.add_argument("--convert", metavar="IN.jsonl", default=None,
+                    help="JSONL event log to convert (needs --trace-out)")
+    ap.add_argument("--trace-out", metavar="OUT.json", default=None,
+                    help="Chrome trace output path for --convert")
+    ap.add_argument("--summary", metavar="IN.jsonl", default=None,
+                    help="print a JSONL log's meta + aggregates as JSON")
+    args = ap.parse_args(argv)
+
+    if not (args.check or args.convert or args.summary):
+        ap.error("nothing to do: pass --check, --convert or --summary")
+
+    rc = 0
+    if args.check:
+        problems = _self_check()
+        if problems:
+            for p in problems:
+                print(f"FAIL: {p}", file=sys.stderr)
+            rc = 1
+        else:
+            print("obs self-check OK")
+
+    if args.convert:
+        if not args.trace_out:
+            ap.error("--convert needs --trace-out")
+        from repro.obs import jsonl_to_chrome, validate_chrome_trace
+
+        trace = jsonl_to_chrome(args.convert, args.trace_out)
+        problems = validate_chrome_trace(trace)
+        if problems:
+            for p in problems:
+                print(f"FAIL: {p}", file=sys.stderr)
+            rc = 1
+        else:
+            print(f"wrote {args.trace_out} ({len(trace['traceEvents'])} events)")
+
+    if args.summary:
+        from repro.obs import read_jsonl
+
+        log = read_jsonl(args.summary)
+        kinds: dict[str, int] = {}
+        for ev in log["events"]:
+            kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
+        print(json.dumps(dict(
+            meta=log["meta"],
+            events=len(log["events"]),
+            event_kinds=kinds,
+            metrics={m["name"]: m for m in log["metrics"]},
+        ), indent=2, default=str))
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,10 @@
 
 ``--continuous`` serves the same prompts as a request stream through the
 continuous-batching engine (paged KV cache, per-request budgets skewed
-around --new-tokens) instead of one static batch.
+around --new-tokens) instead of one static batch. With ``--trace-out`` /
+``--metrics-out`` the continuous run records its request lifecycle
+(repro.obs) and writes a Chrome trace / JSONL event+metrics log; convert
+or summarize saved logs with ``python -m repro.launch.obs``.
 """
 from __future__ import annotations
 
@@ -37,6 +40,11 @@ def main() -> None:
     ap.add_argument("--warmup", action="store_true",
                     help="AOT-precompile every (bucket, chunk, decode) "
                          "program before serving (continuous engine only)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the run's Chrome trace (continuous only)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the run's JSONL event+metrics log "
+                         "(continuous only)")
     args = ap.parse_args()
 
     import jax
@@ -80,9 +88,14 @@ def main() -> None:
             if args.buckets == [0]
             else tuple(args.buckets) if args.buckets else DEFAULT_PREFILL_BUCKETS
         )
+        rec = None
+        if args.trace_out or args.metrics_out:
+            from repro.obs import Recorder
+
+            rec = Recorder()
         eng = ContinuousBatchingEngine(
             cfg, params, ctx, num_slots=args.slots, prefill_buckets=buckets,
-            chunk_size=args.chunk_size, max_pack=args.max_pack,
+            chunk_size=args.chunk_size, max_pack=args.max_pack, recorder=rec,
         )
         if args.warmup:
             t0 = time.time()
@@ -103,6 +116,18 @@ def main() -> None:
         for i in range(min(2, args.batch)):
             o = outs[i]
             print(f"req{i}: ttft={o.ttft} qwait={o.queue_wait_steps} {o.tokens.tolist()}")
+        if args.trace_out:
+            from repro.obs import write_chrome_trace
+
+            t = write_chrome_trace(args.trace_out, rec)
+            print(f"trace: {args.trace_out} ({len(t['traceEvents'])} events)")
+        if args.metrics_out:
+            from repro.obs import write_jsonl
+
+            write_jsonl(args.metrics_out, rec)
+            print(f"metrics: {args.metrics_out} "
+                  f"({len(rec.event_list())} events, "
+                  f"self time {rec.self_time_s*1e3:.2f} ms)")
         return
 
     engine = ServeEngine(cfg, params, ctx, max_len=args.max_len)

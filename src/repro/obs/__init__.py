@@ -1,0 +1,52 @@
+"""repro.obs — the runtime observability layer (see README.md here).
+
+One :class:`Recorder` (bounded event ring + metrics registry) is shared by
+the serve, fleet and train stacks; engines accept it as an optional
+constructor argument and record nothing when it is absent. Exporters
+produce a lossless JSONL event log and a Chrome trace-event file viewable
+in Perfetto; ``python -m repro.launch.obs`` converts/validates/summarizes
+recordings offline.
+"""
+from repro.obs.export import (
+    chrome_trace,
+    jsonl_to_chrome,
+    read_jsonl,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.hooks import PoolMonitor, RequestTracer
+from repro.obs.metrics import (
+    QUEUE_WAIT_STEP_BUCKETS,
+    STEP_LATENCY_BUCKETS_S,
+    TPOT_BUCKETS_S,
+    TTFT_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.recorder import NULL_RECORDER, Event, Recorder, RingBuffer
+
+__all__ = [
+    "Counter",
+    "Event",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_RECORDER",
+    "PoolMonitor",
+    "QUEUE_WAIT_STEP_BUCKETS",
+    "Recorder",
+    "RequestTracer",
+    "RingBuffer",
+    "STEP_LATENCY_BUCKETS_S",
+    "TPOT_BUCKETS_S",
+    "TTFT_BUCKETS_S",
+    "chrome_trace",
+    "jsonl_to_chrome",
+    "read_jsonl",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]

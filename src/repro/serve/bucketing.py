@@ -121,6 +121,7 @@ class PackItem:
     slot: int
     pages: tuple  # full allocated page chain (prompt + decode budget)
     budget: int  # max_new_tokens
+    rid: int = -1  # request id, observability only (never enters a program)
 
 
 def build_pack(

@@ -50,6 +50,8 @@ import numpy as np
 
 from repro.core.masking import FaultContext, healthy
 from repro.models import model as M
+from repro.obs.hooks import PoolMonitor, RequestTracer
+from repro.obs.recorder import NULL_RECORDER, Recorder
 from repro.serve.bucketing import (
     DEFAULT_PREFILL_BUCKETS,
     PackItem,
@@ -311,6 +313,7 @@ class ContinuousBatchingEngine:
         prefill_buckets: Optional[Sequence[int]] = DEFAULT_PREFILL_BUCKETS,
         chunk_size: Optional[int] = None,
         max_pack: int = 4,
+        recorder: Optional[Recorder] = None,
     ):
         if cfg.has_ssm:
             raise ValueError(
@@ -329,6 +332,11 @@ class ContinuousBatchingEngine:
         self.num_pages = num_pages
         self.max_pages_per_seq = max_pages_per_seq or (num_pages - 1)
         self.pad_id = pad_id
+        # observability: every hook below is host-side and gated on the
+        # recorder's truthiness, so an absent/disabled recorder costs one
+        # check per dispatch and recording cannot touch traced code (greedy
+        # parity with recorder on vs off is pinned in tests/test_obs.py)
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         self._page_bytes = page_bytes(cfg, page_size)
         if prefill_buckets is None:
             self.prefill_buckets = None
@@ -519,6 +527,10 @@ class ContinuousBatchingEngine:
         alloc = PageAllocator(self.num_pages, self.page_size)
         table = _SlotTable(requests, self.num_slots, alloc, self.max_pages_per_seq)
         stats = ServeStats(num_slots=self.num_slots, page_size=self.page_size)
+        rec = self.obs
+        tracer = RequestTracer(rec, proc="serve")
+        pool = PoolMonitor(rec, alloc, proc="serve")
+        enqueued: set = set()
 
         V = self.cfg.vocab_size
         dtype = jnp.dtype(self.cfg.dtype)
@@ -549,6 +561,7 @@ class ContinuousBatchingEngine:
             )
             pkey = ("prefill_admit", width)
             fn = self._aot.get(pkey, self._packed_admit)
+            t0 = rec.now() if rec else 0.0
             cache, cur, active, remaining = fn(
                 self.params, arrays["tokens"], arrays["positions"],
                 arrays["segments"], self.ctx, cache, cur, active, remaining,
@@ -558,6 +571,15 @@ class ContinuousBatchingEngine:
             )
             self.used_programs.add(pkey)
             stats.prefill_dispatches += 1
+            if rec:
+                jax.block_until_ready(cur)
+                t1 = rec.now()
+                for it in pack:
+                    tracer.admitted(
+                        it.rid, it.slot, t0, t1,
+                        args=dict(bucket=width, packed=len(pack),
+                                  prompt_len=len(it.tokens)),
+                    )
             pack.clear()
 
         def run_chunks(slot, r, pages):
@@ -574,6 +596,7 @@ class ContinuousBatchingEngine:
                 ct[: st.valid] = toks[st.start : st.start + st.valid]
                 ckey = ("prefill_chunk", st.size)
                 fn = self._aot.get(ckey, self._prefill_chunk)
+                t0 = rec.now() if rec else 0.0
                 cache, cur, active, remaining = fn(
                     self.params, ct[None], self.ctx, cache, cur, active,
                     remaining, np.int32(slot), row, maps["page_ix"],
@@ -583,10 +606,25 @@ class ContinuousBatchingEngine:
                 self.used_programs.add(ckey)
                 stats.prefill_dispatches += 1
                 stats.chunk_dispatches += 1
+                if rec:
+                    jax.block_until_ready(cur)
+                    tracer.chunk(
+                        r.rid, slot, t0, rec.now(), final=st.final,
+                        args=dict(size=st.size, start=st.start, valid=st.valid),
+                    )
 
         clock = 0  # decode-dispatch index
         while not table.done:
             table.stamp_arrivals(clock)
+            if rec:
+                for r in table.pending:
+                    if r.arrival > clock:
+                        break  # pending is arrival-sorted
+                    if r.rid not in enqueued:
+                        enqueued.add(r.rid)
+                        rec.instant("enqueue", proc="serve", track="engine",
+                                    args=dict(rid=r.rid, arrival=r.arrival,
+                                              clock=clock))
             # admissions: fill free slots with every arrived request we can,
             # packing short prompts into shared bucket dispatches
             while True:
@@ -608,12 +646,13 @@ class ContinuousBatchingEngine:
                     flush_pack()
                 pack.append(
                     PackItem(np.asarray(r.tokens, np.int32), slot, tuple(pages),
-                             r.max_new_tokens)
+                             r.max_new_tokens, rid=r.rid)
                 )
             flush_pack()
             stats.peak_resident_kv_bytes = max(
                 stats.peak_resident_kv_bytes, alloc.pages_in_use * self._page_bytes
             )
+            pool.sample()
             if not table.active.any():
                 # idle: jump the clock to the next arrival (no dispatches)
                 nxt = table.next_arrival()
@@ -623,6 +662,7 @@ class ContinuousBatchingEngine:
 
             n_active = int(table.active.sum())
             dfn = self._aot.get(("decode",), self._sample_decode)
+            t0 = rec.now() if rec else 0.0
             emitted, tok_lp, cur, cache, key, active, remaining = dfn(
                 self.params, cur, cache, key, self.ctx, temp, active, eos, remaining
             )
@@ -632,11 +672,28 @@ class ContinuousBatchingEngine:
             stats.emitted_tokens += n_active
             stats.active_slot_steps += n_active
             stats.kv_byte_steps += alloc.pages_in_use * self._page_bytes
-            table.record_step(
-                np.asarray(emitted), np.asarray(tok_lp), np.asarray(active), clock,
-                eos_id=eos_id,
-            )
+            em = np.asarray(emitted)  # forces the dispatch to completion
+            lp = np.asarray(tok_lp)
+            ac = np.asarray(active)
+            if rec:
+                t1 = rec.now()
+                tracer.decode_dispatch(t0, t1, n_active=n_active, clock=clock)
+                slot_of = {r.rid: s for s, r in enumerate(table.slots)
+                           if r is not None}
+            retired = table.record_step(em, lp, ac, clock, eos_id=eos_id)
+            if rec and retired:
+                t1 = rec.now()
+                for rid in retired:
+                    tracer.retired(table.outputs[rid], slot_of[rid], t1)
+                pool.sample()
         stats.peak_resident_kv_bytes = max(
             stats.peak_resident_kv_bytes, alloc.peak_pages * self._page_bytes
         )
+        if rec:
+            cc = self.compile_counts()
+            rec.gauge_set("serve.compiles.aot", cc["aot"])
+            rec.gauge_set("serve.compiles.jit_fallback", cc["jit_fallback"])
+            rec.gauge_set("serve.compiles.total", cc["total"])
+            rec.instant("serve.end", proc="serve", track="engine",
+                        args=stats.as_dict())
         return table.outputs, stats

@@ -60,12 +60,27 @@ class PageAllocator:
     handed out. Allocation is LIFO over the free list (freed pages are
     reused first — the pool stays compact); ``peak_pages`` tracks the
     high-water mark for resident-bytes accounting.
+
+    The allocator tracks exactly which pages are outstanding (``_in_use``):
+    freeing a page it never handed out — a double free OR a "foreign" free
+    of a page owned by another chain, which the old in-free-list check
+    could not see — raises instead of silently corrupting the free list
+    with a page some other request is still writing.
+
+    Observability counters consumed by :class:`repro.obs.hooks.PoolMonitor`:
+    ``high_water`` (peak pages in use) and ``alloc_failures`` — the number
+    of times an allocation was refused for lack of pages, counting both a
+    failed :meth:`alloc` and a ``False`` answer from :meth:`can_alloc`
+    (the admission loops probe ``can_alloc`` before committing, so each
+    refusal is one backpressure stall).
     """
 
     num_pages: int
     page_size: int
     _free: list = field(default_factory=list)
+    _in_use: set = field(default_factory=set)
     peak_pages: int = 0
+    alloc_failures: int = 0
 
     def __post_init__(self):
         if self.num_pages < 2:
@@ -74,6 +89,7 @@ class PageAllocator:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
         # descending so pop() hands out low page ids first (stable tests)
         self._free = list(range(self.num_pages - 1, 0, -1))
+        self._in_use = set()
 
     @property
     def free_pages(self) -> int:
@@ -83,29 +99,45 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return (self.num_pages - 1) - len(self._free)
 
+    @property
+    def high_water(self) -> int:
+        """Peak pages in use over the allocator's lifetime."""
+        return self.peak_pages
+
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        ok = n <= len(self._free)
+        if not ok:
+            self.alloc_failures += 1
+        return ok
 
     def alloc(self, n: int) -> list[int]:
         if n < 1:
             raise ValueError(f"alloc needs n >= 1, got {n}")
         if n > len(self._free):
+            self.alloc_failures += 1
             raise MemoryError(
                 f"page pool exhausted: need {n} pages, {len(self._free)} free "
                 f"of {self.num_pages - 1} allocatable"
             )
         out = [self._free.pop() for _ in range(n)]
+        self._in_use.update(out)
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return out
 
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
             p = int(p)
-            if p <= 0 or p >= self.num_pages:
-                raise ValueError(f"page id {p} outside pool (1..{self.num_pages - 1})")
-            if p in self._free:
+            if p in self._in_use:
+                self._in_use.discard(p)
+                self._free.append(p)
+                continue
+            if 0 < p < self.num_pages and p in self._free:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            raise ValueError(
+                f"free of page {p} this allocator never handed out "
+                "(foreign page — reserved, outside the pool, or another "
+                "allocator owns it)"
+            )
 
 
 def chain_layout(k_dense: jax.Array, page_size: int, chain_len: int) -> jax.Array:

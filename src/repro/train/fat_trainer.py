@@ -81,6 +81,19 @@ class _EngineBackedTrainer:
             self._grad_fn_cache = fn
         return fn
 
+    def _obs_schedule(self, what: str, sched) -> None:
+        """Scheduling decisions are host-side and cheap — surface each one
+        as an instant on the engine's recorder (no-op when obs is off)."""
+        rec = getattr(self.engine, "obs", None)
+        if rec:
+            rec.instant(
+                "schedule", proc="train", track="scheduler",
+                args=dict(what=what, policy=sched.policy, jobs=len(sched.order),
+                          chunks=len(sched.chunks),
+                          wasted_steps=sched.wasted_steps,
+                          span_steps=sched.span_steps),
+            )
+
     # ---- FATTrainerFull protocol (single map + batched) -----------------
     def steps_to_constraint(
         self, fault_map: FaultMap, constraint: float, max_steps: int
@@ -94,6 +107,7 @@ class _EngineBackedTrainer:
         # required steps are what we're measuring — pack by fault rate, the
         # best prior (chunks run until their slowest member crosses)
         sched = self.scheduler.schedule([fm.fault_rate for fm in fault_maps])
+        self._obs_schedule("probe", sched)
         out = self.engine.steps_to_constraint_batch(
             self.base_params, sched.permute(ctxs), constraint, max_steps,
             self._probe_batch_fn,
@@ -107,6 +121,7 @@ class _EngineBackedTrainer:
         ctxs = [from_fault_map(fm) for fm in fault_maps]
         budgets = [int(s) for s in steps]
         sched = self.scheduler.schedule(budgets)
+        self._obs_schedule("train", sched)
         trained = self.engine.fit_batch(
             self.base_params, sched.permute(ctxs), sched.permute(budgets),
             self._train_batch_fn,

@@ -41,9 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.masking import FaultContext, healthy, stack_contexts
+from repro.obs.recorder import NULL_RECORDER, Recorder
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 __all__ = ["PopulationFATEngine", "SerialFATEngine", "make_fat_engine"]
+
+# steps-to-constraint bucket ladder (training steps, not seconds)
+STEPS_BUCKETS = (0.0, 5.0, 10.0, 20.0, 40.0, 80.0, 160.0, 320.0, 640.0, 1280.0)
 
 # batch_fn(step) -> batch dict; must be jax-traceable in ``step`` for the
 # population engine (the deterministic (seed, step) streams in
@@ -79,6 +83,11 @@ class PopulationFATEngine:
         (``repro.launch.sharding`` names). Ignored by this engine and the
         serial reference; the fleet engine uses it to lay member params out
         over the "model" axis of a 2-D ``("pop", "model")`` mesh.
+    recorder : optional :class:`repro.obs.Recorder`. Per-lane telemetry is
+        collected host-side at chunk boundaries — chunk spans with lane
+        widths and wasted lane-steps, per-member constraint-crossing
+        instants, steps-consumed-vs-budget counters — so nothing enters the
+        traced run bodies and the serial↔vmap↔sharded pins hold untouched.
     """
 
     kind = "population"
@@ -94,6 +103,7 @@ class PopulationFATEngine:
         eval_every: int = 5,
         population_size: int = 16,
         param_axes: Optional[Any] = None,
+        recorder: Optional[Recorder] = None,
     ):
         self.loss_fn = loss_fn
         self.opt_cfg = opt_cfg
@@ -102,6 +112,7 @@ class PopulationFATEngine:
         self.eval_every = int(eval_every)
         self.population_size = max(1, int(population_size))
         self.param_axes = param_axes
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         self._eval_stack = _stack_trees(list(eval_batches))
         self._grad = jax.value_and_grad(loss_fn, has_aux=True)
         # compiled programs are cached per (batch_fn, context mode): the
@@ -327,9 +338,25 @@ class PopulationFATEngine:
             key = (batch_fn, stacked.mode)
             if key not in self._fit_programs:
                 self._fit_programs[key] = self._make_fit(batch_fn, stacked.mode)
+            t0 = self.obs.now() if self.obs else 0.0
             trained = self._fit_programs[key](
                 params0, stacked.ok, jnp.asarray(chunk_budgets, jnp.int32)
             )
+            if self.obs:
+                trained = jax.block_until_ready(trained)
+                maxb = max(chunk_budgets) if chunk_budgets else 0
+                lane_steps = size * maxb  # padding lanes occupy real width
+                wasted = lane_steps - sum(chunk_budgets)
+                self.obs.span(
+                    "fit_chunk", proc="train", track="engine", t0=t0,
+                    args=dict(members=keep, width=size, max_budget=maxb,
+                              budget_steps=sum(chunk_budgets),
+                              wasted_lane_steps=wasted),
+                )
+                self.obs.count("train.members_trained", keep)
+                self.obs.count("train.lane_steps", lane_steps)
+                self.obs.count("train.budget_steps", sum(chunk_budgets))
+                self.obs.count("train.wasted_lane_steps", wasted)
             self._record_fit_output(trained, keep, size)
             out.extend(_member_slice(trained, i) for i in range(keep))
         return out
@@ -361,9 +388,36 @@ class PopulationFATEngine:
             key = (batch_fn, stacked.mode)
             if key not in self._steps_programs:
                 self._steps_programs[key] = self._make_steps(batch_fn, stacked.mode)
+            t0 = self.obs.now() if self.obs else 0.0
             crossed = np.asarray(
                 self._steps_programs[key](params0, stacked.ok, constraint, max_steps)
             )
+            if self.obs:
+                # Every lane runs until the slowest member crosses (or
+                # max_steps): realized lane-steps = width * max(realized).
+                realized = [min(int(c), int(max_steps)) for c in crossed[:keep]]
+                worst = max(realized) if realized else 0
+                lane_steps = size * worst
+                wasted = lane_steps - sum(realized)
+                self.obs.span(
+                    "probe_chunk", proc="train", track="engine", t0=t0,
+                    args=dict(members=keep, width=size, max_steps=int(max_steps),
+                              realized_steps=worst, wasted_lane_steps=wasted),
+                )
+                self.obs.count("train.probe_lane_steps", lane_steps)
+                self.obs.count("train.probe_wasted_lane_steps", wasted)
+                for i, c in enumerate(crossed[:keep]):
+                    if int(c) > int(max_steps):
+                        self.obs.count("train.members_never_crossed")
+                    else:
+                        self.obs.observe(
+                            "train.steps_to_constraint", float(c),
+                            buckets=STEPS_BUCKETS,
+                        )
+                        self.obs.instant(
+                            "constraint_crossed", proc="train", track="engine",
+                            args=dict(member=lo + i, steps=int(c)),
+                        )
             out.extend(
                 None if int(c) > int(max_steps) else int(c) for c in crossed[:keep]
             )
@@ -412,9 +466,11 @@ class SerialFATEngine:
         eval_every: int = 5,
         population_size: int = 16,  # interface parity; serial chunks are 1-wide
         param_axes: Optional[Any] = None,  # interface parity; serial never shards
+        recorder: Optional[Recorder] = None,  # interface parity with population
     ):
         self.population_size = 1  # one member at a time — schedulers see no packing
         self.param_axes = param_axes
+        self.obs = recorder if recorder is not None else NULL_RECORDER
         self.loss_fn = loss_fn
         self.opt_cfg = opt_cfg
         self.metric = metric
