@@ -31,10 +31,18 @@ The output is JSON so CI can parse it; ``--smoke`` shrinks the sweep to CI
 scale and only checks equivalence, the full run is the perf claim (>= 3x on
 CPU at repeats >= 4).
 
+``--tuned`` (composable with any mode) additionally audits the kernel
+tuning cache (``repro.tune``): every cached entry is replayed in interpret
+mode with tuned vs heuristic blocks on identical inputs and the outputs
+must agree to float tolerance — tuning may only change wall-clock, never
+the math the resilience tables are built from. The report gains a
+``tuning`` section (per-entry diffs plus the capacity planner's per-kernel
+VMEM reserve) and the run fails on any numeric mismatch.
+
 Usage:
     PYTHONPATH=src python benchmarks/efat_bench.py [--smoke] [--sharded]
         [--mesh POPxMODEL] [--population-size N|auto] [--devices N]
-        [--out FILE]
+        [--tuned] [--out FILE]
 """
 from __future__ import annotations
 
@@ -293,6 +301,56 @@ def _bench_fault_map(i: int):
     return random_fault_map(i, 32, 32, 0.06 + 0.015 * (i % 8))
 
 
+def run_tuned_check() -> dict:
+    """--tuned: prove the tuning cache never changes numerics.
+
+    For every entry in the process-global tuning cache, run the kernel in
+    interpret mode with the TUNED blocks and with the HEURISTIC blocks on
+    identical inputs (the tuner's own deterministic runners) and compare.
+    Block geometry only re-brackets reductions, so the outputs must agree to
+    float tolerance — any larger drift means the cache is changing math, and
+    the bench exits non-zero. Also reports the capacity planner's per-kernel
+    VMEM reserve so ``--population-size auto`` consumers can see what the
+    tuned table costs them.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.fleet.capacity import kernel_vmem_reserve
+    from repro.tune import KERNELS, get_tuning_cache, parse_key
+    from repro.tune.tuner import HEURISTIC_BLOCKS, normalize_blocks
+
+    cache = get_tuning_cache()
+    checks = []
+    all_match = True
+    for key, entry in sorted(cache.entries.items()):
+        kernel, shape, dtype_name, _backend = parse_key(key)
+        heur = normalize_blocks(kernel, shape, HEURISTIC_BLOCKS[kernel])
+        tuned = normalize_blocks(kernel, shape, entry["blocks"])
+        runner = KERNELS[kernel].make_runner(shape, jnp.dtype(dtype_name), True)
+        a = np.asarray(runner(heur))
+        b = np.asarray(runner(tuned))
+        atol = 5e-5 if dtype_name == "float32" else 5e-2
+        match = bool(np.allclose(a, b, rtol=1e-4, atol=atol))
+        all_match = all_match and match
+        checks.append(
+            dict(
+                key=key,
+                heuristic_blocks=heur,
+                tuned_blocks=tuned,
+                max_abs_diff=float(np.max(np.abs(a - b))) if a.size else 0.0,
+                numerics_match=match,
+            )
+        )
+    return dict(
+        tuning_cache_entries=len(cache.entries),
+        tuning_cache_source=cache.source,
+        kernel_vmem_reserve_bytes=kernel_vmem_reserve(cache),
+        checks=checks,
+        numerics_match=all_match,
+    )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-scale sweep; equivalence only")
@@ -315,6 +373,11 @@ def main(argv=None) -> int:
         help="forced host CPU device count for --sharded/--mesh "
         "(ignored if XLA_FLAGS is set)",
     )
+    ap.add_argument(
+        "--tuned", action="store_true",
+        help="also verify the kernel tuning cache: tuned vs heuristic blocks "
+        "must agree numerically per cached entry (tuning never changes math)",
+    )
     ap.add_argument("--out", default=None, help="also write the JSON report to this file")
     args = ap.parse_args(argv)
 
@@ -336,6 +399,8 @@ def main(argv=None) -> int:
         report = run_sharded_bench(smoke=args.smoke)
     else:
         report = run_bench(smoke=args.smoke)
+    if args.tuned:
+        report["tuning"] = run_tuned_check()
     doc = json.dumps(report, indent=2)
     print(doc)
     if args.out:
@@ -344,6 +409,13 @@ def main(argv=None) -> int:
 
     if not report["tables_equal"]:
         print("FAIL: engines disagree on the resilience table", file=sys.stderr)
+        return 1
+    if args.tuned and not report["tuning"]["numerics_match"]:
+        bad = [c["key"] for c in report["tuning"]["checks"] if not c["numerics_match"]]
+        print(
+            "FAIL: tuned blocks changed kernel numerics for: " + ", ".join(bad),
+            file=sys.stderr,
+        )
         return 1
     if args.mesh and not report["memory"]["params_sharded_within_pop_slices"]:
         print(

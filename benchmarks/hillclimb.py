@@ -101,10 +101,12 @@ def run_variant(arch, shape, name, spec, out_dir):
     return info
 
 
-PEAK, HBM, ICI = 197e12, 819e9, 50e9
-
-
 def describe(info):
+    # hardware terms come from the shared constants in repro.tune.roofline
+    from repro.tune.roofline import HBM_BW as HBM
+    from repro.tune.roofline import ICI_BW as ICI
+    from repro.tune.roofline import PEAK_FLOPS as PEAK
+
     if info.get("status") != "ok":
         return f"FAILED: {info.get('error')}"
     hc = info.get("hlo_cost", {})

@@ -10,9 +10,30 @@ Here we measure the paper-relevant CPU-visible deltas:
     (reference path vs the kernel path through the shared runtime layer;
     on CPU the kernel path runs in interpret mode, so the timing is a
     correctness/regression signal, not a perf claim)
+
+``--tune`` runs the kernel autotuner (``repro.tune``) over the committed
+shape suite instead and emits ``benchmarks/BENCH_kernels.json`` — the
+committed perf-trajectory snapshot (per-cell best config, speedup over the
+heuristic, achieved-vs-roofline fraction). ``--tune --check`` gates CI:
+
+  * every committed cell must re-tune to a tuned/heuristic wall-clock ratio
+    no more than 10% (plus a small absolute epsilon) worse than the
+    committed ratio — ratios, not raw seconds, so the gate is portable
+    across runner hardware;
+  * every entry in the committed tuning cache
+    (``src/repro/tune/default_cache.json``) must still pass the
+    kernel-geometry lint — a kernel change that invalidates a cached
+    config fails here, not at launch time.
+
+``--tune --write-cache`` additionally rewrites the committed default cache
+with the fresh winners (run it with ``--out`` when regenerating both
+artifacts after a kernel or suite change).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -210,5 +231,178 @@ def print_rows(fns) -> None:
             print(f'{fn.__name__},-1,"ERROR: {e}"', flush=True)
 
 
+# ---------------------------------------------------------------------------
+# --tune: the committed kernel-autotuning suite + perf-trajectory snapshot
+# ---------------------------------------------------------------------------
+
+SNAPSHOT_VERSION = 1
+BENCH_PATH = "benchmarks/BENCH_kernels.json"
+
+# The committed shape suite: small enough that interpret mode finishes in CI
+# minutes, non-trivial enough that the heuristic is NOT always the winner
+# (heuristic blocks smaller than the axis leave grid steps on the table).
+TUNE_SUITE: list[tuple[str, dict]] = [
+    ("masked_matmul", dict(m=64, k=64, n=64, r=16, c=16)),
+    ("masked_matmul", dict(m=128, k=128, n=128, r=32, c=32)),
+    ("flash_attention", dict(b=1, hq=2, hkv=1, sq=256, skv=256, d=32, causal=1)),
+    ("decode_attention", dict(b=1, hq=2, hkv=2, skv=512, d=32)),
+    ("mamba_scan", dict(b=1, l=256, d=64, n=8)),
+]
+
+# --check tolerance on the tuned/heuristic wall-clock ratio: machine noise
+# moves both numerators and denominators, so a relative band + small
+# absolute epsilon holds across runner generations.
+RATIO_SLACK_REL = 1.10
+RATIO_SLACK_ABS = 0.05
+
+
+def run_tune(iters: int = 3, max_evals: int = 16):
+    """Tune the committed suite; returns (snapshot_dict, results, cache)."""
+    from repro.kernels.common import backend_tag, is_tpu_backend
+    from repro.obs.recorder import Recorder
+    from repro.tune import set_tuning_cache, tune_many, TuningCache
+
+    # tune against heuristics only — a stale global cache must not seed
+    # (or contaminate) the measurement of what the heuristic costs
+    prev = set_tuning_cache(TuningCache())
+    rec = Recorder()
+    try:
+        results, cache = tune_many(
+            TUNE_SUITE, iters=iters, max_evals=max_evals, recorder=rec
+        )
+    finally:
+        set_tuning_cache(prev)
+
+    cells = {}
+    for res in results:
+        cells[res.key] = dict(
+            kernel=res.kernel,
+            shape=res.shape,
+            dtype=res.dtype,
+            heuristic=dict(
+                blocks=res.heuristic_blocks, us=round(res.heuristic_s * 1e6, 1)
+            ),
+            tuned=dict(blocks=res.best_blocks, us=round(res.best_s * 1e6, 1)),
+            ratio=round(res.best_s / res.heuristic_s, 4),
+            speedup=round(res.speedup, 4),
+            roofline_fraction=res.roofline_fraction,
+            vmem_bytes=res.vmem_bytes,
+            evaluated=res.evaluated,
+            rejected=res.rejected,
+        )
+    snapshot = dict(
+        version=SNAPSHOT_VERSION,
+        backend=backend_tag(not is_tpu_backend()),
+        iters=iters,
+        max_evals=max_evals,
+        tune_spans_recorded=len(rec.event_list()),
+        cells=cells,
+    )
+    return snapshot, results, cache
+
+
+def check_tune(snapshot: dict, committed_path: str) -> list[str]:
+    """CI gate: fresh snapshot vs the committed one + relint of the
+    committed tuning cache. Returns a list of failure messages."""
+    from repro.tune.cache import DEFAULT_CACHE_PATH, TuningCache, parse_key
+    from repro.tune.tuner import lint_candidate
+
+    failures: list[str] = []
+    try:
+        committed = json.load(open(committed_path))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot read committed snapshot {committed_path}: {e}"]
+    if committed.get("version") != SNAPSHOT_VERSION:
+        return [f"committed snapshot version {committed.get('version')} != {SNAPSHOT_VERSION}"]
+
+    fresh_cells = snapshot["cells"]
+    for key, cell in committed.get("cells", {}).items():
+        fresh = fresh_cells.get(key)
+        if fresh is None:
+            failures.append(
+                f"committed cell {key} missing from the fresh tune — suite "
+                "changed? regenerate with --tune --out " + committed_path
+            )
+            continue
+        bound = cell["ratio"] * RATIO_SLACK_REL + RATIO_SLACK_ABS
+        if fresh["ratio"] > bound:
+            failures.append(
+                f"{key}: tuned/heuristic ratio regressed to {fresh['ratio']:.3f} "
+                f"(committed {cell['ratio']:.3f}, bound {bound:.3f}) — the tuner "
+                "no longer finds the committed win"
+            )
+
+    # every committed cache entry must still be a lintable launch
+    cache = TuningCache.load(DEFAULT_CACHE_PATH)
+    for key, entry in cache.entries.items():
+        kernel, shape, dtype, _backend = parse_key(key)
+        findings, _ = lint_candidate(kernel, shape, jnp.dtype(dtype), entry["blocks"])
+        if findings:
+            codes = ",".join(f.code for f in findings)
+            failures.append(
+                f"cached config {key} -> {entry['blocks']} now fails the "
+                f"kernel-geometry lint ({codes}) — a kernel change invalidated "
+                "it; re-run --tune --write-cache"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tune", action="store_true", help="run the autotuner suite")
+    ap.add_argument("--check", action="store_true",
+                    help="with --tune: gate against the committed snapshot")
+    ap.add_argument("--write-cache", action="store_true",
+                    help="with --tune: rewrite src/repro/tune/default_cache.json")
+    ap.add_argument("--out", default=None,
+                    help=f"with --tune: write the snapshot (canonical: {BENCH_PATH})")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--max-evals", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    if not args.tune:
+        print_rows(ALL)
+        return 0
+
+    snapshot, results, cache = run_tune(iters=args.iters, max_evals=args.max_evals)
+    for res in results:
+        print(
+            f"{res.kernel:18s} {res.heuristic_blocks} {res.heuristic_s*1e6:9.1f}us"
+            f" -> {res.best_blocks} {res.best_s*1e6:9.1f}us  x{res.speedup:.2f}"
+            f"  roofline {res.roofline_fraction:.2e}  ({res.evaluated} timed,"
+            f" {res.rejected} lint-rejected)",
+            file=sys.stderr, flush=True,
+        )
+    # gate BEFORE writing: --check always compares against the *committed*
+    # snapshot, even when --out points at the same file
+    failures: list[str] = []
+    if args.check:
+        failures = check_tune(snapshot, BENCH_PATH)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(snapshot, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    if args.write_cache:
+        from repro.tune.cache import DEFAULT_CACHE_PATH
+
+        cache.save(DEFAULT_CACHE_PATH)
+        print(f"wrote {DEFAULT_CACHE_PATH} ({len(cache)} entries)", file=sys.stderr)
+
+    if args.check:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        if failures:
+            return 1
+        print(
+            f"tune check OK: {len(snapshot['cells'])} cells within "
+            f"{RATIO_SLACK_REL:.0%}+{RATIO_SLACK_ABS} of the committed ratios; "
+            "cached configs lint-clean",
+            file=sys.stderr,
+        )
+    return 0
+
+
 if __name__ == "__main__":
-    print_rows(ALL)
+    raise SystemExit(main())

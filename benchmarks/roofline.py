@@ -21,10 +21,10 @@ from dataclasses import dataclass
 
 from repro.configs import SHAPES, get_arch
 
-# TPU v5e hardware constants (per chip)
-PEAK_FLOPS = 197e12  # bf16
-HBM_BW = 819e9  # bytes/s
-ICI_BW = 50e9  # bytes/s per link (conservative single-link budget)
+# TPU v5e hardware constants (per chip) — single source of truth in
+# repro.tune.roofline, shared with the kernel autotuner's per-winner
+# achieved-vs-roofline fractions
+from repro.tune.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 CHIPS = {"pod1": 256, "pod2": 512}
 

@@ -56,7 +56,9 @@ class KernelLaunch:
 
     ``dims``/``blocks`` are the gridded axes (post-padding dims, in grid
     order); ``vmem_blocks`` is every VMEM-resident buffer of one program
-    instance as ``(shape, dtype)`` — in/out blocks plus scratch.
+    instance as ``(shape, dtype)`` or ``(shape, dtype, is_io)`` — in/out
+    blocks plus scratch; ``is_io=False`` marks scratch buffers the Mosaic
+    pipeline does NOT double-buffer (see ``vmem_footprint``).
     ``mask_blocks`` are ``(block, period)`` pairs for periodic-mask axes
     (masked matmul); ``ctx`` is the FaultContext the launch would consume.
     """
@@ -187,7 +189,7 @@ def masked_matmul_launch(
             ((bk_, bn_), dtype),  # w block
             ((mask_br, mask_bc), jnp.float32),  # mask block
             ((bm_, bn_), dtype),  # out block
-            ((bm_, bn_), jnp.float32),  # accumulator scratch
+            ((bm_, bn_), jnp.float32, False),  # accumulator scratch
         ),
         mask_blocks=((bk_, r), (bn_, c)),
         ctx=ctx,
@@ -222,9 +224,9 @@ def flash_attention_launch(
             ((1, bkv_, d), dtype),  # k block
             ((1, bkv_, d), dtype),  # v block
             ((1, bq_, d), dtype),  # out block
-            ((bq_, d), jnp.float32),  # o accumulator
-            ((bq_, _LANES), jnp.float32),  # running max
-            ((bq_, _LANES), jnp.float32),  # running sum
+            ((bq_, d), jnp.float32, False),  # o accumulator scratch
+            ((bq_, _LANES), jnp.float32, False),  # running max scratch
+            ((bq_, _LANES), jnp.float32, False),  # running sum scratch
         ),
     )
 
@@ -258,9 +260,9 @@ def decode_attention_launch(
                 ((1, 1, page, d), jnp.int8),  # v page
                 ((1, 1, page), jnp.float32),  # v scales
                 ((1, gq, d), jnp.float32),  # out block
-                ((gq, d), jnp.float32),  # o accumulator
-                ((gq, _LANES), jnp.float32),  # running max
-                ((gq, _LANES), jnp.float32),  # running sum
+                ((gq, d), jnp.float32, False),  # o accumulator scratch
+                ((gq, _LANES), jnp.float32, False),  # running max scratch
+                ((gq, _LANES), jnp.float32, False),  # running sum scratch
             ),
         )
     bq = 8  # TPU sublane minimum; decode q is 1 row padded
@@ -277,9 +279,9 @@ def decode_attention_launch(
             ((1, bkv_, d), jnp.int8),  # v block
             ((1, bkv_), jnp.float32),  # v scales
             ((1, bq, d), jnp.float32),  # out block
-            ((bq, d), jnp.float32),  # o accumulator
-            ((bq, _LANES), jnp.float32),  # running max
-            ((bq, _LANES), jnp.float32),  # running sum
+            ((bq, d), jnp.float32, False),  # o accumulator scratch
+            ((bq, _LANES), jnp.float32, False),  # running max scratch
+            ((bq, _LANES), jnp.float32, False),  # running sum scratch
         ),
     )
 
@@ -313,7 +315,7 @@ def mamba_scan_launch(
             ((1, bd_), dtype),  # D skip
             ((1, bl_, bd_), dtype),  # y out
             ((1, bd_, n), jnp.float32),  # h_last out
-            ((bd_, n), jnp.float32),  # h scratch
+            ((bd_, n), jnp.float32, False),  # h scratch
         ),
     )
 

@@ -8,6 +8,12 @@ the members a single device can hold grows linearly with the model axis.
 ``population_size`` the sharded engine can run without paging — the ROADMAP
 "size ``population_size`` against HBM" item, consumed by
 ``benchmarks/efat_bench.py --population-size auto``.
+
+With ``reserve_kernel_vmem=True`` the planner additionally reserves the
+per-lane scratch the Pallas kernels keep resident, read from the tuning
+cache's recorded per-kernel VMEM footprints (:func:`kernel_vmem_reserve`)
+— tuned geometry often trades bigger blocks for fewer grid steps, so the
+reserve grows with the tuned table instead of assuming heuristic blocks.
 """
 from __future__ import annotations
 
@@ -17,7 +23,7 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["suggest_population_size"]
+__all__ = ["suggest_population_size", "kernel_vmem_reserve"]
 
 # fp32 master params + fp32 AdamW m and v (repro.train.optimizer defaults;
 # 'bfloat16' moment_dtype would be 4 + 2 + 2)
@@ -37,6 +43,22 @@ def _device_memory_bytes(mesh: Optional[Mesh]) -> int:
     return _FALLBACK_DEVICE_BYTES
 
 
+def kernel_vmem_reserve(cache=None) -> int:
+    """Total per-lane VMEM the tuned kernels keep resident, in bytes.
+
+    Sums the tuning cache's recorded per-kernel maximum VMEM footprints
+    (``TuningCache.vmem_footprints()``) — the worst tuned block geometry each
+    kernel may pick. An empty or missing cache contributes 0, matching the
+    "empty cache == heuristic behaviour" contract. ``cache=None`` reads the
+    process-global cache (default table + env overlay).
+    """
+    if cache is None:
+        from repro.tune.cache import get_tuning_cache
+
+        cache = get_tuning_cache()
+    return int(sum(cache.vmem_footprints().values()))
+
+
 def suggest_population_size(
     cfg,
     mesh: Optional[Mesh] = None,
@@ -45,6 +67,8 @@ def suggest_population_size(
     headroom: float = 0.6,
     bytes_per_param: int = _DEFAULT_BYTES_PER_PARAM,
     max_members_per_lane: int = 64,
+    reserve_kernel_vmem: bool = False,
+    tuning_cache=None,
 ) -> int:
     """Largest population chunk width the mesh can hold resident.
 
@@ -61,6 +85,11 @@ def suggest_population_size(
         member (default fp32 params + fp32 AdamW moments = 12).
     max_members_per_lane : cap on members per pop slice (compile-shape and
         latency guard, matching ``population_size`` chunking semantics).
+    reserve_kernel_vmem : opt-in — subtract :func:`kernel_vmem_reserve` from
+        the member-state budget before sizing, so tuned kernel geometry
+        (bigger resident blocks) shrinks the suggestion instead of paging.
+    tuning_cache : explicit ``TuningCache`` for the reserve; None reads the
+        process-global cache. Ignored unless ``reserve_kernel_vmem=True``.
 
     Returns a population size that is a positive multiple of the pop-axis
     extent (the sharded engine would round it up anyway). Raises ValueError
@@ -73,6 +102,14 @@ def suggest_population_size(
         raise ValueError(f"hbm_bytes must be positive, got {hbm_bytes}")
     if not 0.0 < headroom <= 1.0:
         raise ValueError(f"headroom must be in (0, 1], got {headroom}")
+    if reserve_kernel_vmem:
+        reserve = kernel_vmem_reserve(tuning_cache)
+        if reserve >= hbm_bytes:
+            raise ValueError(
+                f"kernel VMEM reserve {reserve} bytes exceeds the "
+                f"{hbm_bytes}-byte device budget"
+            )
+        hbm_bytes = hbm_bytes - reserve
 
     pop_extent, model_extent = 1, 1
     if mesh is not None:

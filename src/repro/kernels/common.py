@@ -33,7 +33,9 @@ __all__ = [
     "tpu_compiler_params",
     "is_tpu_backend",
     "resolve_interpret",
+    "backend_tag",
     "choose_block",
+    "tuned_block",
     "pad_to_multiple",
     "pad_amount",
     "pad_axis_to",
@@ -104,6 +106,14 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     return bool(interpret)
 
 
+def backend_tag(interpret: bool) -> str:
+    """The backend component of a tuning-cache key: ``"interpret"`` for
+    Pallas interpret mode (any host), else the JAX backend name ("tpu",
+    "cpu", ...). Interpret-mode timings are a different machine from
+    compiled Mosaic, so their tuned configs must never cross-pollinate."""
+    return "interpret" if interpret else str(jax.default_backend())
+
+
 # ---------------------------------------------------------------------------
 # Block sizes, padding, grids
 # ---------------------------------------------------------------------------
@@ -128,6 +138,52 @@ def choose_block(dim: int, requested: int, *, multiple_of: int = 1) -> int:
                 key=lambda c: (pad_to_multiple(dim, c) - dim, -c),
             )
     return b
+
+
+def tuned_block(
+    kernel: str,
+    shape: Mapping[str, int],
+    dtype: Any,
+    *,
+    interpret: bool,
+    defaults: Mapping[str, int],
+    overrides: Optional[Mapping[str, Optional[int]]] = None,
+) -> dict[str, int]:
+    """THE seam between the ``ops.py`` wrappers and the tuning cache.
+
+    Resolution order, per block parameter:
+
+    1. an explicit caller value (``overrides`` entry that is not None) —
+       callers who ask for a block get exactly that block, as before;
+    2. the process-wide tuning cache (:mod:`repro.tune.cache`) under the
+       canonical ``(kernel, shape, dtype, backend)`` key;
+    3. the wrapper's heuristic ``defaults`` — so with an empty cache this
+       function is an identity on today's behavior, bitwise.
+
+    Returned blocks still flow through ``choose_block``/clamping in the
+    wrapper, so even a stale cached config degrades to a *legal* launch
+    (the ``kernel_bench.py --tune --check`` CI gate catches it turning
+    stale before that). Lookups happen at trace time: a jitted caller
+    bakes the blocks of its first trace into the compiled program.
+    """
+    blocks = {k: int(v) for k, v in defaults.items()}
+    from repro.tune.cache import get_tuning_cache  # JAX-free, cycle-free
+
+    hit = get_tuning_cache().lookup_blocks(
+        kernel,
+        shape,
+        jnp.dtype(dtype).name,
+        backend_tag(interpret),
+    )
+    if hit:
+        for k in blocks:
+            if k in hit:
+                blocks[k] = int(hit[k])
+    if overrides:
+        for k, v in overrides.items():
+            if v is not None:
+                blocks[k] = int(v)
+    return blocks
 
 
 def pad_to_multiple(n: int, block: int) -> int:
@@ -200,15 +256,29 @@ def block_bytes(shape: Sequence[int], dtype: Any) -> int:
     return n * jnp.dtype(dtype).itemsize
 
 
-def vmem_footprint(blocks: Sequence[tuple[Sequence[int], Any]]) -> int:
+def vmem_footprint(
+    blocks: Sequence[tuple], *, double_buffered: bool = False
+) -> int:
     """Analytic VMEM footprint of a kernel invocation: the sum of its
     resident blocks — every ``in_specs``/``out_specs`` block plus scratch
-    shapes, each given as ``(shape, dtype)``. Double-buffering of DMA'd
-    operands is intentionally NOT modeled (it roughly doubles input-block
-    bytes); callers compare against a conservative fraction of
-    :data:`VMEM_LIMIT_BYTES` instead.
+    shapes. Entries are ``(shape, dtype)`` or ``(shape, dtype, is_io)``
+    where ``is_io`` marks a gridded in/out block the Mosaic pipeline DMAs
+    (True for 2-tuples — scratch accumulators should pass False).
+
+    With ``double_buffered=False`` (the lint's historical model) each block
+    counts once; ``double_buffered=True`` doubles the DMA'd ``is_io``
+    blocks — the bound the autotuner uses, since the pipelined prefetch of
+    the next grid step keeps two copies of every in/out block resident.
     """
-    return sum(block_bytes(shape, dtype) for shape, dtype in blocks)
+    total = 0
+    for entry in blocks:
+        shape, dtype = entry[0], entry[1]
+        is_io = bool(entry[2]) if len(entry) > 2 else True
+        nbytes = block_bytes(shape, dtype)
+        if double_buffered and is_io:
+            nbytes *= 2
+        total += nbytes
+    return total
 
 
 # ---------------------------------------------------------------------------

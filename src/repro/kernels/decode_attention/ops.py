@@ -10,7 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to
+from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to, tuned_block
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_pallas,
     paged_decode_attention_pallas,
@@ -35,9 +35,11 @@ def decode_attention(
     kv_valid_len,
     *,
     scale: Optional[float] = None,
-    bkv: int = 128,
+    bkv: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
+    """``bkv`` defaults to the tuning cache's winner for this launch when
+    one exists, else the 128 heuristic (``tuned_block`` seam)."""
     if interpret is None:
         if not is_tpu_backend():
             return decode_attention_ref(
@@ -49,6 +51,14 @@ def decode_attention(
     b, hq, sq, d = q.shape
     hkv, skv = k_i8.shape[1], k_i8.shape[2]
     group = hq // hkv
+    bkv = tuned_block(
+        "decode_attention",
+        dict(b=b, hq=hq, hkv=hkv, skv=skv, d=d),
+        q.dtype,
+        interpret=interpret,
+        defaults=dict(bkv=128),
+        overrides=dict(bkv=bkv),
+    )["bkv"]
     bq = 8  # TPU sublane minimum; decode q is 1 row padded
     qf = pad_axes_to(q.reshape(b * hq, sq, d), {1: bq})
     skv_p = skv + pad_amount(skv, bkv)

@@ -10,7 +10,7 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to
+from repro.kernels.common import is_tpu_backend, pad_amount, pad_axes_to, tuned_block
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -24,10 +24,12 @@ def flash_attention(
     window: Optional[int] = None,
     q_offset: int = 0,
     scale: Optional[float] = None,
-    bq: int = 128,
-    bkv: int = 128,
+    bq: int | None = None,
+    bkv: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
+    """``bq``/``bkv`` default to the tuning cache's winner for this launch
+    when one exists, else the 128 heuristics (``tuned_block`` seam)."""
     if interpret is None:
         if not is_tpu_backend():
             return attention_ref(
@@ -39,6 +41,15 @@ def flash_attention(
     hkv, skv = k.shape[1], k.shape[2]
     assert hq % hkv == 0, (hq, hkv)
     group = hq // hkv
+    blocks = tuned_block(
+        "flash_attention",
+        dict(b=b, hq=hq, hkv=hkv, sq=sq, skv=skv, d=d, causal=int(causal)),
+        q.dtype,
+        interpret=interpret,
+        defaults=dict(bq=128, bkv=128),
+        overrides=dict(bq=bq, bkv=bkv),
+    )
+    bq, bkv = blocks["bq"], blocks["bkv"]
 
     bq_ = min(bq, sq)
     pad_q = pad_amount(sq, max(bq_, 8))

@@ -10,17 +10,30 @@ instead, losing the chunked VMEM schedule."""
 from __future__ import annotations
 
 
-from repro.kernels.common import is_tpu_backend, pad_axes_to, pad_to_multiple
+from repro.kernels.common import is_tpu_backend, pad_axes_to, pad_to_multiple, tuned_block
 from repro.kernels.mamba_scan.mamba_scan import selective_scan_pallas
 from repro.kernels.mamba_scan.ref import selective_scan_ref, selective_step_ref
 
 
-def selective_scan(u, dt, a, b, c, d, *, bd: int = 256, bl: int = 128, interpret=None):
+def selective_scan(
+    u, dt, a, b, c, d, *, bd: int | None = None, bl: int | None = None, interpret=None
+):
+    """``bd``/``bl`` default to the tuning cache's winner for this launch
+    when one exists, else the 256/128 heuristics (``tuned_block`` seam)."""
     if interpret is None:
         if not is_tpu_backend():
             return selective_scan_ref(u, dt, a, b, c, d)
         interpret = False
-    _, length, dim = u.shape
+    bsz, length, dim = u.shape
+    blocks = tuned_block(
+        "mamba_scan",
+        dict(b=bsz, l=length, d=dim, n=a.shape[1]),
+        u.dtype,
+        interpret=interpret,
+        defaults=dict(bd=256, bl=128),
+        overrides=dict(bd=bd, bl=bl),
+    )
+    bd, bl = blocks["bd"], blocks["bl"]
     bd_ = min(bd, dim)
     bl_ = min(bl, length)
     dim_p = pad_to_multiple(dim, bd_)

@@ -14,6 +14,7 @@ from repro.kernels.common import (
     is_tpu_backend,
     pad_axes_to,
     pad_to_multiple,
+    tuned_block,
 )
 from repro.kernels.masked_matmul.masked_matmul import masked_matmul_pallas
 from repro.kernels.masked_matmul.ref import masked_matmul_ref
@@ -24,12 +25,16 @@ def masked_matmul(
     w: jax.Array,
     ok: jax.Array,
     *,
-    bm: int = 512,
-    bn: int = 512,
-    bk: int = 512,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """y = x @ (w * periodic_mask(ok)); x: (..., K), w: (K, N), ok: (R, C)."""
+    """y = x @ (w * periodic_mask(ok)); x: (..., K), w: (K, N), ok: (R, C).
+
+    Block sizes default to the tuning cache's winner for this launch when
+    one exists, else the 512 heuristics (``tuned_block`` seam); an explicit
+    ``bm``/``bn``/``bk`` always wins."""
     if interpret is None:
         if not is_tpu_backend():
             return masked_matmul_ref(x, w, ok)
@@ -43,6 +48,15 @@ def masked_matmul(
     x2 = x.reshape(m, kdim)
 
     r, c = ok.shape
+    blocks = tuned_block(
+        "masked_matmul",
+        dict(m=m, k=kdim, n=n, r=r, c=c),
+        x.dtype,
+        interpret=interpret,
+        defaults=dict(bm=512, bn=512, bk=512),
+        overrides=dict(bm=bm, bn=bn, bk=bk),
+    )
+    bm, bn, bk = blocks["bm"], blocks["bn"], blocks["bk"]
     # block sizes must stay compatible with the mask period
     bm_ = choose_block(m, bm)
     bn_ = choose_block(n, bn, multiple_of=c)

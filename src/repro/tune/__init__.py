@@ -1,0 +1,36 @@
+"""Kernel autotuning: lint-gated block search + persistent tuning cache.
+
+* :mod:`repro.tune.cache` — versioned JSON tuning table (committed default
+  + ``$REPRO_TUNING_CACHE`` user overlay) consulted by every ``ops.py``
+  wrapper through ``kernels/common.py::tuned_block``;
+* :mod:`repro.tune.tuner` — the autotuner (candidates statically gated by
+  the ``repro.analysis.kernelgeom`` lint before anything compiles);
+* :mod:`repro.tune.search` — powers-of-two lattice + greedy hillclimb;
+* :mod:`repro.tune.roofline` — hardware constants and per-kernel analytic
+  FLOP/byte models for achieved-vs-roofline fractions.
+
+See ``src/repro/tune/README.md`` for the search space and cache format.
+"""
+from repro.tune.cache import (
+    TuningCache,
+    cache_key,
+    get_tuning_cache,
+    parse_key,
+    reset_tuning_cache,
+    set_tuning_cache,
+)
+from repro.tune.tuner import KERNELS, SHAPE_FIELDS, TuneResult, tune_kernel, tune_many
+
+__all__ = [
+    "TuningCache",
+    "cache_key",
+    "parse_key",
+    "get_tuning_cache",
+    "set_tuning_cache",
+    "reset_tuning_cache",
+    "KERNELS",
+    "SHAPE_FIELDS",
+    "TuneResult",
+    "tune_kernel",
+    "tune_many",
+]

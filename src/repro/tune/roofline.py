@@ -1,0 +1,82 @@
+"""Analytic roofline terms for the four Pallas kernels.
+
+One home for the hardware constants (previously duplicated between
+``benchmarks/roofline.py`` and ``benchmarks/hillclimb.py`` — both now
+import from here) plus per-kernel FLOP/byte models so the autotuner can
+record *achieved-vs-roofline fraction* next to every winner it caches:
+
+    bound_s  = max(flops / PEAK_FLOPS, bytes / HBM_BW)
+    fraction = bound_s / measured_s
+
+On a real TPU the fraction is the genuine roofline headroom; in CPU
+interpret mode (tests, CI) it is a tiny bookkeeping number — the *ordering*
+of candidates is the signal there, and the committed snapshots record the
+backend next to the fraction so the two regimes can't be confused.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax.numpy as jnp
+
+__all__ = [
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+    "kernel_flops_bytes",
+    "roofline_fraction",
+]
+
+# TPU v5e hardware constants (per chip) — the same numbers the dry-run
+# roofline (benchmarks/roofline.py) and the SPerf hillclimb driver use.
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (conservative single-link budget)
+
+
+def kernel_flops_bytes(kernel: str, shape: Mapping[str, int], dtype) -> tuple[float, float]:
+    """(flops, hbm_bytes) of one logical kernel invocation.
+
+    Shapes use the same field names as the tuning-cache keys (see
+    ``repro.tune.tuner.SHAPE_FIELDS``). The models count the logical
+    (unpadded) problem: 2mnk GEMM FLOPs, one HBM touch per operand —
+    a *ceiling*, which is exactly what a roofline fraction wants.
+    """
+    s = {k: int(v) for k, v in shape.items()}
+    isz = jnp.dtype(dtype).itemsize
+    if kernel == "masked_matmul":
+        m, k, n, r, c = s["m"], s["k"], s["n"], s["r"], s["c"]
+        flops = 2.0 * m * k * n + k * n  # GEMM + the fused mask multiply
+        byts = (m * k + k * n + m * n) * isz + r * c * 4
+        return flops, byts
+    if kernel == "flash_attention":
+        b, hq, sq, skv, d = s["b"], s["hq"], s["sq"], s["skv"], s["d"]
+        causal = s.get("causal", 1)
+        flops = 4.0 * b * hq * sq * skv * d  # qk^T + pv
+        if causal and sq == skv:
+            flops /= 2.0  # masked half of the score matrix never lands
+        byts = (b * hq * sq * d * 2 + b * s["hkv"] * skv * d * 2) * isz
+        return flops, byts
+    if kernel == "decode_attention":
+        b, hq, hkv, skv, d = s["b"], s["hq"], s["hkv"], s["skv"], s["d"]
+        flops = 4.0 * b * hq * skv * d
+        # int8 K/V + f32 scales dominate; q and out are one token
+        byts = 2.0 * b * hkv * skv * (d + 4) + 2.0 * b * hq * d * 4
+        return flops, byts
+    if kernel == "mamba_scan":
+        b, length, d, n = s["b"], s["l"], s["d"], s["n"]
+        # per (token, channel): dA=exp(dt*A) (~2n), dB*u (~2n), h update
+        # (~2n), y=C.h (~2n) + D skip
+        flops = b * length * d * (8.0 * n + 2.0)
+        byts = (4.0 * b * length * d + 2.0 * b * length * n) * isz + d * n * 4 + d * 4
+        return flops, byts
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def roofline_fraction(flops: float, hbm_bytes: float, measured_s: float) -> float:
+    """Fraction of the compute/memory roofline the measured time achieves
+    (1.0 = running exactly at the analytic bound; small = headroom)."""
+    if measured_s <= 0:
+        return 0.0
+    bound_s = max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
+    return bound_s / measured_s

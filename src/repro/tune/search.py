@@ -1,0 +1,94 @@
+"""Candidate lattice + greedy neighborhood search for the kernel autotuner.
+
+The search space per kernel is the powers-of-two block lattice; every raw
+point is *normalized* through the same ``choose_block``/clamping rules the
+``ops.py`` wrappers apply (via the ``analysis.kernelgeom`` launch builders,
+which mirror them exactly), so distinct raw points that collapse to the
+same launch are deduplicated before anything is timed.
+
+:func:`hillclimb` is the generic skeleton of the SPerf loop in
+``benchmarks/hillclimb.py`` — score a start point, walk one-parameter
+neighbors, move on first improvement, stop when no neighbor improves —
+lifted out so block-geometry search and launch-policy search share one
+shape. Scoring here is *wall-clock of a lint-accepted candidate*; the lint
+gate lives in the candidate generator, so a rejected config is never
+scored (and therefore never compiled or launched).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Mapping, Optional, Sequence
+
+__all__ = ["pow2_lattice", "lattice_neighbors", "hillclimb"]
+
+
+def pow2_lattice(dim: int, *, lo: int = 8, hi: int = 4096) -> list[int]:
+    """Powers of two in [lo, min(hi, next_pow2(dim))], plus ``dim`` itself —
+    the whole-axis block is always a candidate (it is often the winner on
+    small axes, and it's what the heuristics clamp to)."""
+    dim = int(dim)
+    out = []
+    b = 1
+    while b <= min(hi, 2 * dim):
+        if lo <= b <= dim:
+            out.append(b)
+        b *= 2
+    if dim not in out and dim >= 1:
+        out.append(dim)
+    return sorted(set(out))
+
+
+def lattice_neighbors(
+    blocks: Mapping[str, int], lattices: Mapping[str, Sequence[int]]
+) -> Iterable[dict[str, int]]:
+    """One-parameter moves: each block param steps to the adjacent lattice
+    value (up first — larger blocks usually mean fewer grid steps)."""
+    for name, lattice in lattices.items():
+        cur = blocks[name]
+        # position of the closest lattice point (cur itself when present)
+        idx = min(range(len(lattice)), key=lambda i: (abs(lattice[i] - cur), i))
+        for j in (idx + 1, idx - 1):
+            if 0 <= j < len(lattice) and lattice[j] != cur:
+                yield {**blocks, name: lattice[j]}
+
+
+def hillclimb(
+    start,
+    neighbors: Callable[[dict], Iterable[dict]],
+    score: Callable[[dict], Optional[float]],
+    *,
+    key: Callable[[dict], tuple] = lambda c: tuple(sorted(c.items())),
+    max_evals: int = 32,
+):
+    """Greedy first-improvement neighborhood search.
+
+    ``score`` returns a float (lower is better) or ``None`` for a candidate
+    that must not be evaluated further (the tuner returns None for
+    lint-rejected configs — they cost one static check, never a launch).
+    Returns ``(best, best_score, evals)`` where ``evals`` counts scored
+    candidates including the start.
+    """
+    seen = {key(start)}
+    best_score = score(start)
+    if best_score is None:
+        raise ValueError(f"hillclimb start {start!r} is not scoreable")
+    best = start
+    evals = 1
+    improved = True
+    while improved and evals < max_evals:
+        improved = False
+        for cand in neighbors(best):
+            k = key(cand)
+            if k in seen:
+                continue
+            seen.add(k)
+            s = score(cand)
+            if s is None:
+                continue
+            evals += 1
+            if s < best_score:
+                best, best_score = cand, s
+                improved = True
+                break
+            if evals >= max_evals:
+                break
+    return best, best_score, evals

@@ -1,12 +1,34 @@
 """Unit tests for the shared kernel-runtime layer (repro.kernels.common):
 the JAX-version compiler-params shim, pad/unpad geometry, backend
-autodetection, and the per-dtype tolerance table."""
+autodetection, and the per-dtype tolerance table.
+
+``hypothesis`` is optional (same contract as tests/test_core.py): without
+it only the ``choose_block`` property tests skip."""
 import types
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in offline environments
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis is not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 from repro.kernels import common
 
@@ -111,6 +133,48 @@ def test_choose_block_respects_period():
     assert common.choose_block(96, 512, multiple_of=24) == 96
 
 
+@settings(max_examples=200, deadline=None)
+@given(
+    dim=st.integers(min_value=1, max_value=4096),
+    requested=st.integers(min_value=1, max_value=8192),
+    period=st.integers(min_value=1, max_value=256),
+)
+def test_choose_block_properties(dim, requested, period):
+    """The tuner normalizes every lattice point through choose_block, so its
+    contract is load-bearing: the result is positive, period-compatible
+    (divides the period or is a multiple of it), never exceeds
+    max(dim, period), and when it lands on a period multiple it is the
+    minimal-padding choice with LARGEST-block tie-breaking."""
+    b = common.choose_block(dim, requested, multiple_of=period)
+    assert b >= 1
+    assert b <= max(dim, period)
+    if period > 1:
+        assert period % b == 0 or b % period == 0
+    # never bigger than asked for, except when snapping up to the period
+    assert b <= max(min(requested, dim), period)
+    b0 = max(1, min(requested, dim))
+    if period > 1 and b0 >= period and b0 % period:
+        pad = common.pad_to_multiple(dim, b) - dim
+        for c in range(period, b0 + 1, period):
+            pad_c = common.pad_to_multiple(dim, c) - dim
+            assert (pad_c, -c) >= (pad, -b), (
+                f"candidate {c} (pad {pad_c}) beats chosen {b} (pad {pad})"
+            )
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    dim=st.integers(min_value=1, max_value=2048),
+    requested=st.integers(min_value=1, max_value=4096),
+    period=st.integers(min_value=1, max_value=128),
+)
+def test_choose_block_idempotent(dim, requested, period):
+    """Re-normalizing a chosen block is a fixed point (what lets the tuner
+    memoize candidates by their normalized key)."""
+    b = common.choose_block(dim, requested, multiple_of=period)
+    assert common.choose_block(dim, b, multiple_of=period) == b
+
+
 def test_masked_matmul_dim_exceeds_non_power_of_two_period():
     """dim > mask period but not a period multiple must pad, not raise."""
     from repro.kernels.masked_matmul.ops import masked_matmul
@@ -199,6 +263,45 @@ def test_kernel_entrypoint_autodetects_interpret_on_cpu():
     ok = (jax.random.uniform(key, (16, 16)) > 0.3).astype(jnp.float32)
     out = masked_matmul_pallas(x, w, ok, bm=16, bn=16, bk=16)
     common.assert_close(out, masked_matmul_ref(x, w, ok), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# analytic VMEM model
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_single_buffered_default():
+    blocks = [((128, 128), jnp.float32), ((128, 128), jnp.bfloat16)]
+    assert common.vmem_footprint(blocks) == 128 * 128 * 4 + 128 * 128 * 2
+
+
+def test_vmem_footprint_double_buffered_doubles_io_blocks_only():
+    io = ((64, 64), jnp.float32)  # 2-tuple: DMA'd in/out block
+    scratch = ((64, 64), jnp.float32, False)  # accumulator, never DMA'd
+    single = common.vmem_footprint([io, scratch])
+    double = common.vmem_footprint([io, scratch], double_buffered=True)
+    assert single == 2 * 64 * 64 * 4
+    # only the io block doubles: 2x io + 1x scratch
+    assert double == 3 * 64 * 64 * 4
+
+
+def test_vmem_footprint_explicit_io_flag_matches_two_tuple():
+    a = common.vmem_footprint([((32, 8), jnp.float32)], double_buffered=True)
+    b = common.vmem_footprint([((32, 8), jnp.float32, True)], double_buffered=True)
+    assert a == b == 2 * 32 * 8 * 4
+
+
+def test_kernelgeom_launches_mark_scratch_non_io():
+    """The launch builders must tag accumulator scratch with is_io=False so
+    the tuner's double-buffered bound doesn't double-count it."""
+    from repro.analysis.kernelgeom import masked_matmul_launch
+
+    launch = masked_matmul_launch(256, 256, 256, (32, 32), bm=64, bn=64, bk=64)
+    flags = [e[2] if len(e) > 2 else True for e in launch.vmem_blocks]
+    assert False in flags and True in flags
+    assert common.vmem_footprint(
+        launch.vmem_blocks, double_buffered=True
+    ) < 2 * common.vmem_footprint(launch.vmem_blocks)
 
 
 # ---------------------------------------------------------------------------
