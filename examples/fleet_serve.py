@@ -19,7 +19,9 @@ Force a multi-device CPU mesh to see real sharding:
 ``--trace-out`` writes a Chrome trace of the fleet run — one Perfetto
 swimlane per chip slot plus per-chip page-pool counters; ``--metrics-out``
 writes the JSONL event+metrics log (``python -m repro.launch.obs`` converts
-or summarizes it).
+or summarizes it). ``--probe-every N`` turns on the online fault-detection
+stack (per-chip ABFT checksum/canary probes + health scoring + alerts)
+and ``--health-out`` saves the per-chip health summary JSON.
 """
 import argparse
 import time
@@ -45,7 +47,15 @@ def main():
                     help="write the fleet run's Chrome trace")
     ap.add_argument("--metrics-out", default=None, metavar="FILE",
                     help="write the fleet run's JSONL event+metrics log")
+    ap.add_argument("--probe-every", type=int, default=None, metavar="N",
+                    help="dispatch per-chip ABFT probes every N fused decode "
+                         "dispatches and score chip health")
+    ap.add_argument("--health-out", default=None, metavar="FILE",
+                    help="write the per-chip health + alert summary JSON "
+                         "(needs --probe-every)")
     args = ap.parse_args()
+    if args.health_out and not args.probe_every:
+        ap.error("--health-out needs --probe-every")
 
     cfg = reduce_config(get_arch("qwen3-0.6b"))
     stream = TokenStream(cfg.vocab_size, 32, 8, seed=2, noise=0.02)
@@ -85,14 +95,20 @@ def main():
     streams = [stream_for(c) for c in range(args.chips)]
 
     rec = None
-    if args.trace_out or args.metrics_out:
+    if args.trace_out or args.metrics_out or args.health_out:
         from repro.obs import Recorder
 
         rec = Recorder()
+    alert_rules = None
+    if args.probe_every:
+        from repro.obs import default_slo_rules
+
+        alert_rules = default_slo_rules()
     t0 = time.time()
     fleet_eng = ShardedFleetServeEngine(
         cfg, [p for p, _, _ in chips], [c for _, c, _ in chips],
         num_slots=2, page_size=8, num_pages=64, recorder=rec,
+        probe_every=args.probe_every, alert_rules=alert_rules,
     )
     outs, stats = fleet_eng.serve(streams)
     t_fleet = time.time() - t0
@@ -123,10 +139,30 @@ def main():
     for c, (_, _, rate) in enumerate(chips):
         o = outs[c]
         lead = o[0]
+        health = (
+            f" health={fleet_eng.health.state(c)}"
+            if fleet_eng.health is not None else ""
+        )
         print(
             f"  chip {c}: fault_rate={rate:.2f} requests={len(o)} "
-            f"ttft(rid0)={lead.ttft} continuation={lead.tokens.tolist()}"
+            f"ttft(rid0)={lead.ttft} continuation={lead.tokens.tolist()}{health}"
         )
+    if args.probe_every:
+        print(
+            f"probes: {stats.probe_dispatches} dispatches "
+            f"(every {args.probe_every} fused steps), detections="
+            f"{fleet_eng.health.detections}, alerts firing="
+            f"{fleet_eng.alerts.firing() if fleet_eng.alerts else []}"
+        )
+    if args.health_out:
+        import json
+
+        with open(args.health_out, "w") as f:
+            json.dump(dict(
+                health=fleet_eng.health.summary(),
+                alerts=fleet_eng.alerts.summary() if fleet_eng.alerts else None,
+            ), f, indent=2)
+        print(f"health: {args.health_out}")
 
     if args.trace_out:
         from repro.obs import write_chrome_trace

@@ -30,7 +30,7 @@ per-chip ``ContinuousBatchingEngine`` runs (tests/test_serve_continuous.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.masking import FaultContext, healthy, stack_contexts
 from repro.launch.mesh import make_pop_mesh
 from repro.models import model as M
+from repro.obs.alerts import AlertEngine, AlertRule
+from repro.obs.health import HealthConfig, HealthTracker
 from repro.obs.hooks import PoolMonitor, RequestTracer
 from repro.obs.recorder import NULL_RECORDER, Recorder
 from repro.serve.bucketing import (
@@ -186,6 +188,9 @@ class ShardedFleetServeEngine:
         chunk_size: Optional[int] = None,
         max_pack: int = 4,
         recorder: Optional[Recorder] = None,
+        probe_every: Optional[int] = None,
+        health_config: Optional[HealthConfig] = None,
+        alert_rules: Optional[Sequence[AlertRule]] = None,
     ):
         n = len(params_list)
         if n == 0:
@@ -296,6 +301,91 @@ class ShardedFleetServeEngine:
         self._prefill_chunk = jax.jit(
             self._prefill_chunk_fn, donate_argnums=(3, 4, 5, 6)
         )
+        # fault detection (ROADMAP item 2): one ABFT prober per chip, all
+        # dispatched every probe_every fused decode dispatches. Probes are
+        # SEPARATE dispatches through one shared jitted program and never
+        # touch the serve loop's carried state or key streams, so enabling
+        # them changes no sampled token on any chip.
+        if probe_every is not None and probe_every < 1:
+            raise ValueError(f"probe_every must be >= 1, got {probe_every}")
+        self.probe_every = int(probe_every) if probe_every else None
+        self._probers: Optional[list] = None
+        self.health: Optional[HealthTracker] = None
+        self.alerts = AlertEngine(self.obs, alert_rules) if alert_rules else None
+        if self.probe_every:
+            self._init_probers(health_config)
+
+    def _init_probers(self, health_config: Optional[HealthConfig]) -> None:
+        from repro.kernels.masked_matmul.ops import masked_matmul_checksummed
+        from repro.obs.abft import ChipProber, select_probe_weight
+
+        cfg = self.cfg
+        rows, cols = cfg.array_rows, cfg.array_cols
+        probe_fn = jax.jit(masked_matmul_checksummed)  # shared: one compile
+        ones = jnp.ones((rows, cols), jnp.float32)
+        dtype = jnp.dtype(cfg.dtype)
+
+        def make_dispatch(c, w):
+            def dispatch(x):
+                # chip c's LIVE mask: re-read self.ctxs so a set_silicon()
+                # change is what the next probe computes through
+                ok = self.ctxs[c].ok
+                y, chk = probe_fn(
+                    jnp.asarray(x, dtype), w, ok if ok is not None else ones
+                )
+                return np.asarray(y), np.asarray(chk)
+
+            return dispatch
+
+        self._probers = []
+        for c, params_c in enumerate(self.params_list):
+            _, w = select_probe_weight(params_c)
+            self._probers.append(ChipProber(
+                make_dispatch(c, w), array_shape=(rows, cols),
+                k_dim=int(w.shape[0]), chip=c,
+            ))
+        self.health = HealthTracker(
+            self.num_chips, self.obs, config=health_config, proc="fleet"
+        )
+
+    def set_silicon(self, chip: int, ctx: FaultContext) -> None:
+        """Simulate a mid-flight silicon change on one chip: swap the LIVE
+        fault context chip ``chip``'s subsequent dispatches compute through,
+        WITHOUT rebasing that chip's prober goldens — so its next probe
+        sees the divergence and the other chips' don't. The fleet must have
+        been built with ACTIVE contexts (possibly zero-fault FaultMaps) on
+        every chip: the compiled programs carry the stacked ok mask as a
+        live input, and an ok=None ↔ ok=array flip would be a different
+        program."""
+        if not 0 <= chip < self.num_chips:
+            raise ValueError(f"chip {chip} out of range [0, {self.num_chips})")
+        if self.ctx.ok is None:
+            raise ValueError(
+                "set_silicon needs an ACTIVE fleet: construct every chip "
+                "with an explicit (possibly zero-fault) FaultMap context so "
+                "the stacked mask is a live program input"
+            )
+        if ctx is None or ctx.ok is None:
+            raise ValueError(
+                "set_silicon needs an ACTIVE context; pass a zero-fault "
+                "FaultMap context to model pristine silicon"
+            )
+        if ctx.mode != self.ctx.mode:
+            raise ValueError(
+                f"mode mismatch: fleet {self.ctx.mode!r} vs new {ctx.mode!r}"
+            )
+        if tuple(ctx.ok.shape) != tuple(self.ctx.ok.shape[1:]):
+            raise ValueError(
+                f"ok shape mismatch: chip expects "
+                f"{tuple(self.ctx.ok.shape[1:])}, got {tuple(ctx.ok.shape)}"
+            )
+        self.ctxs[chip] = ctx
+        # the stacked mask is an UNDONATED dispatch input, so a functional
+        # row update is safe between dispatches
+        self.ctx = FaultContext(
+            ok=self.ctx.ok.at[chip].set(jnp.asarray(ctx.ok, self.ctx.ok.dtype)),
+            mode=self.ctx.mode,
+        )
 
     # -- jitted admission: the bucketed planner's programs, chip-indexed ----
 
@@ -372,12 +462,16 @@ class ShardedFleetServeEngine:
         temperature: float = 0.0,
         eos_id: Optional[int] = None,
         key: Optional[jax.Array] = None,
+        on_step: Optional[Callable[[int], None]] = None,
     ) -> tuple[list[dict[int, RequestOutput]], ServeStats]:
         """Serve one ragged request stream per chip to completion.
 
         Returns (per-chip outputs-by-rid, fleet-level stats). Stats count
         fused dispatches — the whole fleet advances per dispatch, so the
-        total is driven by the busiest chip, not the sum over chips."""
+        total is driven by the busiest chip, not the sum over chips.
+        ``on_step(clock)`` runs at the top of every scheduler round — the
+        injection hook benchmarks use to flip one chip's silicon mid-serve
+        (``set_silicon``)."""
         if len(streams) != self.num_chips:
             raise ValueError(f"{self.num_chips} chips but {len(streams)} request streams")
         stats = ServeStats(
@@ -481,6 +575,8 @@ class ShardedFleetServeEngine:
 
         clock = 0
         while not all(t.done for t in tables):
+            if on_step is not None:
+                on_step(clock)
             for c, table in enumerate(tables):
                 table.stamp_arrivals(clock)
                 pack: list[PackItem] = []
@@ -542,14 +638,41 @@ class ShardedFleetServeEngine:
                 if rec:
                     slot_of = {r.rid: s for s, r in enumerate(table.slots)
                                if r is not None}
+                if self.health is not None:
+                    msk = table.active  # the mask this dispatch computed under
+                    self.health.observe_decode(
+                        c, clock=clock,
+                        mean_logprob=(
+                            float(lp[c][msk].mean()) if msk.any() else None
+                        ),
+                        alloc_failures=allocs[c].alloc_failures,
+                    )
                 retired = table.record_step(em[c], lp[c], ac[c], clock, eos_id=eos_id)
                 if rec and retired:
                     t1 = rec.now()
                     for rid in retired:
                         tracers[c].retired(table.outputs[rid], slot_of[rid], t1)
                     pools[c].sample()
+            if self._probers is not None and clock % self.probe_every == 0:
+                for c, prober in enumerate(self._probers):
+                    t0p = rec.now() if rec else 0.0
+                    res = prober.probe(clock=clock)
+                    stats.probe_dispatches += res.dispatches
+                    if rec:
+                        rec.span("probe", proc="fleet", track=f"chip{c}/health",
+                                 t0=t0p, t1=rec.now(), args=res.as_dict())
+                        rec.count("probe.dispatches", res.dispatches)
+                    self.health.observe_probe(c, res, clock=clock)
+                if self.alerts:
+                    self.alerts.evaluate(clock=clock)
         # peak residency is exact from the per-round samples: pages only
         # grow at admission (sampled) and shrink at retirement
+        for p in pools:
+            p.flush()  # close every chip's counter series at the final ts
+        if self.health is not None:
+            self.health.finalize()
+        if self.alerts:
+            self.alerts.evaluate(clock=clock)
         if rec:
             rec.instant("serve.end", proc="fleet", track="engine",
                         args=dict(chips=self.num_chips, **stats.as_dict()))

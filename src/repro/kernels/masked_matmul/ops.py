@@ -75,3 +75,31 @@ def masked_matmul(
     )
     y = y[:m, :n]
     return y.reshape(*lead, n)
+
+
+def masked_matmul_checksummed(
+    x: jax.Array,
+    w: jax.Array,
+    ok: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """ABFT-augmented masked GEMM (Zhang et al., arxiv 1802.04657): append
+    the column-checksum row ``1^T x`` to the input and push the augmented
+    batch through the SAME masked path, so the checksum row experiences the
+    same silicon (mask) as the payload rows. Returns ``(y, check_row)``
+    where on consistent hardware ``check_row[b] == sum_m y[m, b]`` up to
+    float reassociation; a permanent fault in PE column ``b % C`` perturbs
+    both through the identical mask, which is what lets
+    ``repro.obs.abft`` fold the check-row syndrome back onto PE columns."""
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    x2 = x.reshape(-1, kdim)
+    xa = jnp.concatenate(
+        [x2, x2.sum(axis=0, keepdims=True).astype(x2.dtype)], axis=0
+    )
+    ya = masked_matmul(xa, w, ok, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return ya[:-1].reshape(*lead, w.shape[1]), ya[-1]

@@ -6,14 +6,18 @@ milliseconds:
 
 * ``--check`` — exercise the recorder end to end in-process (spans /
   instants / samples / metrics, ring wraparound, JSONL round-trip, Chrome
-  export + schema validation) and exit 0 iff everything holds. This is the
-  canary that the exporters CI later feeds real serve traces through are
+  export + schema validation) PLUS the fault-detection stack (ABFT prober
+  against a numpy silicon model, health state-machine debounce, alert
+  fire/resolve) and exit 0 iff everything holds. This is the canary that
+  the exporters CI later feeds real serve traces through are
   self-consistent.
 * ``--convert IN.jsonl --trace-out OUT.json`` — re-export a saved JSONL
   event log (``--metrics-out`` from the serve CLIs / benches) as a Chrome
   trace viewable in https://ui.perfetto.dev.
-* ``--summary IN.jsonl`` — print a log's meta line, event-kind counts and
-  metric aggregates as JSON.
+* ``--summary IN.jsonl`` — print a log's meta line, event-kind counts,
+  metric aggregates, dropped-event accounting and any alert fire/resolve
+  instants as JSON (a dropped-ring log warns on stderr). Combined with
+  ``--check``, exits 1 if the log holds alerts that fired.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.obs --check
@@ -96,6 +100,102 @@ def _self_check() -> list[str]:
         problems += [f"re-exported: {p}" for p in validate_chrome_trace(round_trip)]
     finally:
         os.unlink(path)
+    return problems + _detection_check()
+
+
+def _detection_check() -> list[str]:
+    """JAX-free smoke of the fault-detection stack: the ABFT prober against
+    a numpy silicon model, the health state machine's debounce, and alert
+    fire/resolve."""
+    import numpy as np
+
+    from repro.obs import (
+        HEALTHY,
+        SUSPECT,
+        AlertEngine,
+        AlertRule,
+        ChipHealth,
+        ChipProber,
+        HealthConfig,
+        Recorder,
+    )
+    from repro.obs.abft import periodic_mask_np
+    from repro.obs.health import DriftDetector, Ewma
+
+    problems: list[str] = []
+
+    # -- ABFT prober over a numpy silicon model ---------------------------
+    rng = np.random.default_rng(0)
+    R, C, K, N = 4, 4, 24, 20
+    W = rng.standard_normal((K, N)).astype(np.float32)
+    ok = np.ones((R, C), bool)
+
+    def dispatch(x):
+        m = periodic_mask_np(W.shape, ok)
+        y = (np.asarray(x, np.float64) @ (W * m)).astype(np.float32)
+        chk = (np.asarray(x, np.float64).sum(axis=0) @ (W * m)).astype(np.float32)
+        return y, chk
+
+    prober = ChipProber(dispatch, array_shape=(R, C), k_dim=K)
+    res = prober.probe(clock=0)
+    if res.detected or res.canary_mismatches or res.dispatches != 1:
+        problems.append(f"healthy probe not clean: {res.as_dict()}")
+    ok[2, 1] = False  # silicon degrades under the prober
+    res = prober.probe(clock=1)
+    if not res.detected:
+        problems.append("prober missed an injected fault")
+    elif res.delta is None or not res.delta[2, 1] or int(res.delta.sum()) != 1:
+        problems.append(f"prober mislocalized the fault: {res.as_dict()}")
+    prober.rebase()  # accept the new silicon as the believed map
+    res = prober.probe(clock=2)
+    if res.detected:
+        problems.append("probe after rebase still detects")
+
+    # -- EWMA / drift primitives ------------------------------------------
+    e = Ewma(alpha=0.5)
+    e.update(1.0)
+    e.update(0.0)
+    if not (0.4 < e.value < 0.6):
+        problems.append(f"ewma update wrong: {e.value}")
+    d = DriftDetector(warmup=3)
+    zs = [d.update(1.0) for _ in range(8)]
+    if any(zs):
+        problems.append(f"drift z nonzero on a constant series: {zs}")
+
+    # -- health state machine debounce ------------------------------------
+    cfg = HealthConfig(suspect_after=2, recover_after=2)
+    bad = type(res)(canary_mismatches=3, syndrome_cols=np.ones(C), detected=True,
+                    dispatches=2)
+    clean = type(res)(canary_mismatches=0, syndrome_cols=np.zeros(C),
+                      detected=False, dispatches=1)
+    h = ChipHealth(0, cfg)
+    h.observe_probe(bad, clock=0)
+    if h.state != HEALTHY:
+        problems.append("single bad probe transitioned before debounce")
+    h.observe_probe(bad, clock=1)
+    if h.state != SUSPECT or h.detected_at != 1:
+        problems.append(f"debounced suspect transition broken: {h.summary()}")
+    h.observe_probe(clean, clock=2)
+    h.observe_probe(clean, clock=3)
+    if h.state != HEALTHY:
+        problems.append(f"recovery after clean streak broken: {h.summary()}")
+
+    # -- alert engine fire / debounce / resolve ---------------------------
+    rec = Recorder(capacity=32)
+    eng = AlertEngine(rec, [AlertRule("hot", "temp", ">", 10.0, for_ticks=2)])
+    rec.gauge_set("temp", 50.0)
+    if eng.evaluate(clock=0) != []:
+        problems.append("alert fired before for_ticks debounce")
+    if eng.evaluate(clock=1) != ["hot"]:
+        problems.append("alert failed to fire after debounce")
+    rec.gauge_set("temp", 1.0)
+    eng.evaluate(clock=2)
+    if eng.firing() or eng.fired_total != 1:
+        problems.append(f"alert resolve broken: {eng.summary()}")
+    alert_events = [e for e in rec.event_list() if e.name == "alert"]
+    states = [e.args["state"] for e in alert_events]
+    if states != ["firing", "resolved"]:
+        problems.append(f"alert instants wrong: {states}")
     return problems
 
 
@@ -145,12 +245,37 @@ def main(argv=None) -> int:
         kinds: dict[str, int] = {}
         for ev in log["events"]:
             kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
-        print(json.dumps(dict(
+        alert_events = [
+            dict(ts=ev.ts, **(ev.args or {}))
+            for ev in log["events"]
+            if ev.kind == "instant" and ev.name == "alert"
+        ]
+        fired = sorted({a.get("name") for a in alert_events
+                        if a.get("state") == "firing"})
+        detections = [
+            dict(ts=ev.ts, **(ev.args or {}))
+            for ev in log["events"]
+            if ev.kind == "instant" and ev.name == "fault.detected"
+        ]
+        out = dict(
             meta=log["meta"],
             events=len(log["events"]),
+            events_dropped=log["dropped"],
             event_kinds=kinds,
+            alerts=dict(fired=fired, events=alert_events),
+            fault_detections=detections,
             metrics={m["name"]: m for m in log["metrics"]},
-        ), indent=2, default=str))
+        )
+        if log["dropped"]:
+            out["warnings"] = [
+                f"ring overwrote {log['dropped']} event(s); the oldest "
+                "events are missing from this log"
+            ]
+            print(f"WARNING: {out['warnings'][0]}", file=sys.stderr)
+        print(json.dumps(out, indent=2, default=str))
+        if args.check and fired:
+            print(f"FAIL: log holds fired alerts: {fired}", file=sys.stderr)
+            rc = 1
 
     return rc
 

@@ -9,6 +9,9 @@ around --new-tokens) instead of one static batch. With ``--trace-out`` /
 ``--metrics-out`` the continuous run records its request lifecycle
 (repro.obs) and writes a Chrome trace / JSONL event+metrics log; convert
 or summarize saved logs with ``python -m repro.launch.obs``.
+``--probe-every N`` turns on the online fault-detection stack (ABFT
+checksum/canary probes + health scoring + SLO alerts) and
+``--health-out`` saves its summary JSON.
 """
 from __future__ import annotations
 
@@ -45,7 +48,16 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None, metavar="FILE",
                     help="write the run's JSONL event+metrics log "
                          "(continuous only)")
+    ap.add_argument("--probe-every", type=int, default=None, metavar="N",
+                    help="dispatch an ABFT checksum/canary probe every N "
+                         "decode dispatches and score chip health "
+                         "(continuous only)")
+    ap.add_argument("--health-out", default=None, metavar="FILE",
+                    help="write the health + alert summary JSON "
+                         "(needs --probe-every)")
     args = ap.parse_args()
+    if args.health_out and not args.probe_every:
+        ap.error("--health-out needs --probe-every")
 
     import jax
 
@@ -89,13 +101,19 @@ def main() -> None:
             else tuple(args.buckets) if args.buckets else DEFAULT_PREFILL_BUCKETS
         )
         rec = None
-        if args.trace_out or args.metrics_out:
+        if args.trace_out or args.metrics_out or args.health_out:
             from repro.obs import Recorder
 
             rec = Recorder()
+        alert_rules = None
+        if args.probe_every:
+            from repro.obs import default_slo_rules
+
+            alert_rules = default_slo_rules()
         eng = ContinuousBatchingEngine(
             cfg, params, ctx, num_slots=args.slots, prefill_buckets=buckets,
             chunk_size=args.chunk_size, max_pack=args.max_pack, recorder=rec,
+            probe_every=args.probe_every, alert_rules=alert_rules,
         )
         if args.warmup:
             t0 = time.time()
@@ -116,6 +134,21 @@ def main() -> None:
         for i in range(min(2, args.batch)):
             o = outs[i]
             print(f"req{i}: ttft={o.ttft} qwait={o.queue_wait_steps} {o.tokens.tolist()}")
+        if args.probe_every:
+            print(
+                f"probes: {stats.probe_dispatches} dispatches "
+                f"(every {args.probe_every}), health={eng.health.state(0)}, "
+                f"alerts firing={eng.alerts.firing() if eng.alerts else []}"
+            )
+        if args.health_out:
+            import json
+
+            with open(args.health_out, "w") as f:
+                json.dump(dict(
+                    health=eng.health.summary(),
+                    alerts=eng.alerts.summary() if eng.alerts else None,
+                ), f, indent=2)
+            print(f"health: {args.health_out}")
         if args.trace_out:
             from repro.obs import write_chrome_trace
 

@@ -6,7 +6,20 @@ constructor argument and record nothing when it is absent. Exporters
 produce a lossless JSONL event log and a Chrome trace-event file viewable
 in Perfetto; ``python -m repro.launch.obs`` converts/validates/summarizes
 recordings offline.
+
+The detection layer (ROADMAP item 2) lives here too: ABFT checksum/canary
+probes (:mod:`repro.obs.abft`), per-chip EWMA health scoring with a
+debounced healthy→suspect→degraded state machine
+(:mod:`repro.obs.health`), and the declarative alert/SLO engine over the
+metrics registry (:mod:`repro.obs.alerts`).
 """
+from repro.obs.abft import ChipProber, ProbeResult
+from repro.obs.alerts import (
+    AlertEngine,
+    AlertRule,
+    default_slo_rules,
+    detection_rules,
+)
 from repro.obs.export import (
     chrome_trace,
     jsonl_to_chrome,
@@ -14,6 +27,14 @@ from repro.obs.export import (
     validate_chrome_trace,
     write_chrome_trace,
     write_jsonl,
+)
+from repro.obs.health import (
+    DEGRADED,
+    HEALTHY,
+    SUSPECT,
+    ChipHealth,
+    HealthConfig,
+    HealthTracker,
 )
 from repro.obs.hooks import PoolMonitor, RequestTracer
 from repro.obs.metrics import (
@@ -29,21 +50,33 @@ from repro.obs.metrics import (
 from repro.obs.recorder import NULL_RECORDER, Event, Recorder, RingBuffer
 
 __all__ = [
+    "AlertEngine",
+    "AlertRule",
+    "ChipHealth",
+    "ChipProber",
     "Counter",
+    "DEGRADED",
     "Event",
     "Gauge",
+    "HEALTHY",
+    "HealthConfig",
+    "HealthTracker",
     "Histogram",
     "MetricsRegistry",
     "NULL_RECORDER",
     "PoolMonitor",
+    "ProbeResult",
     "QUEUE_WAIT_STEP_BUCKETS",
     "Recorder",
     "RequestTracer",
     "RingBuffer",
+    "SUSPECT",
     "STEP_LATENCY_BUCKETS_S",
     "TPOT_BUCKETS_S",
     "TTFT_BUCKETS_S",
     "chrome_trace",
+    "default_slo_rules",
+    "detection_rules",
     "jsonl_to_chrome",
     "read_jsonl",
     "validate_chrome_trace",

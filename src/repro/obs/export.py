@@ -22,6 +22,7 @@ it returns a list of problems, empty when valid.
 from __future__ import annotations
 
 import json
+import warnings
 from typing import Iterable, Optional, Sequence, Union
 
 from repro.obs.recorder import JSONL_VERSION, Event, Recorder
@@ -44,18 +45,30 @@ def _events_of(src: RecorderOrEvents) -> list[Event]:
     return list(src)
 
 
-def chrome_trace(sources: Union[RecorderOrEvents, Sequence[RecorderOrEvents]]) -> dict:
+def chrome_trace(sources: Union[RecorderOrEvents, Sequence[RecorderOrEvents]],
+                 *, events_dropped: Optional[int] = None) -> dict:
     """Build the Chrome trace-event object from one or several recorders
     (or raw event lists — e.g. re-read from a JSONL log). Multiple sources
     merge into one trace; their ``proc`` names keep them on separate
-    process lanes."""
+    process lanes.
+
+    A trace built from a ring that overwrote events is INCOMPLETE — its
+    oldest events are gone. The drop count (summed off Recorder sources,
+    or passed explicitly via ``events_dropped`` when re-exporting a JSONL
+    log) is embedded as ``otherData.events_dropped`` so
+    :func:`validate_chrome_trace` can warn downstream."""
     if isinstance(sources, Recorder) or not isinstance(sources, (list, tuple)):
         sources = [sources]  # a single recorder / event iterable
     elif sources and all(isinstance(s, Event) for s in sources):
         sources = [sources]  # a bare list of events IS one source
     events: list[Event] = []
+    dropped = 0
     for s in sources:
+        if isinstance(s, Recorder):
+            dropped += s.events.dropped
         events.extend(_events_of(s))
+    if events_dropped is not None:
+        dropped = int(events_dropped)
 
     pids: dict[str, int] = {}
     tids: dict[tuple, int] = {}
@@ -85,7 +98,10 @@ def chrome_trace(sources: Union[RecorderOrEvents, Sequence[RecorderOrEvents]]) -
                             args=dict(value=ev.value)))
         else:
             raise ValueError(f"unknown event kind {ev.kind!r}")
-    return dict(traceEvents=out, displayTimeUnit="ms")
+    trace = dict(traceEvents=out, displayTimeUnit="ms")
+    if dropped:
+        trace["otherData"] = dict(events_dropped=dropped)
+    return trace
 
 
 def write_chrome_trace(path: str,
@@ -99,7 +115,12 @@ def write_chrome_trace(path: str,
 
 def validate_chrome_trace(trace: Union[str, dict]) -> list[str]:
     """Schema check; returns problems (empty list == valid). Accepts the
-    trace object or a path to one."""
+    trace object or a path to one.
+
+    A schema-valid trace can still be *incomplete*: when it was built from
+    a ring that overwrote events (``otherData.events_dropped`` embedded by
+    :func:`chrome_trace`), this emits a ``UserWarning`` — dropped history
+    is not a schema error, but it must not pass silently."""
     if isinstance(trace, str):
         try:
             with open(trace) as f:
@@ -109,6 +130,18 @@ def validate_chrome_trace(trace: Union[str, dict]) -> list[str]:
     problems: list[str] = []
     if not isinstance(trace, dict) or "traceEvents" not in trace:
         return ["top level must be an object with a traceEvents list"]
+    dropped = 0
+    other = trace.get("otherData")
+    if isinstance(other, dict):
+        d = other.get("events_dropped")
+        if isinstance(d, (int, float)):
+            dropped = int(d)
+    if dropped:
+        warnings.warn(
+            f"trace was built from a ring that overwrote {dropped} event(s); "
+            "the oldest events are missing (grow Recorder(capacity=...))",
+            UserWarning, stacklevel=2,
+        )
     events = trace["traceEvents"]
     if not isinstance(events, list) or not events:
         return ["traceEvents must be a non-empty list"]
@@ -174,8 +207,10 @@ def write_jsonl(path: str, recorder: Recorder) -> None:
 
 
 def read_jsonl(path: str) -> dict:
-    """Parse a :func:`write_jsonl` log into
-    ``{"meta": dict, "events": [Event], "metrics": [dict]}``."""
+    """Parse a :func:`write_jsonl` log into ``{"meta": dict, "events":
+    [Event], "metrics": [dict], "dropped": int}`` — the ring's drop count
+    is lifted to the top level so callers cannot miss that the event list
+    is missing its oldest entries when it is nonzero."""
     meta: Optional[dict] = None
     events: list[Event] = []
     metrics: list[dict] = []
@@ -203,13 +238,16 @@ def read_jsonl(path: str) -> dict:
                 raise ValueError(f"{path}:{ln}: unknown record kind {kind!r}")
     if meta is None:
         raise ValueError(f"{path}: missing meta header line")
-    return dict(meta=meta, events=events, metrics=metrics)
+    return dict(meta=meta, events=events, metrics=metrics,
+                dropped=int(meta.get("events_dropped", 0) or 0))
 
 
 def jsonl_to_chrome(in_path: str, out_path: str) -> dict:
-    """Re-export a saved JSONL log as a viewable Chrome trace."""
+    """Re-export a saved JSONL log as a viewable Chrome trace. The log's
+    recorded drop count propagates into the trace's ``otherData`` so the
+    validator still warns about incomplete history after a round-trip."""
     log = read_jsonl(in_path)
-    trace = chrome_trace(log["events"])
+    trace = chrome_trace(log["events"], events_dropped=log["dropped"])
     with open(out_path, "w") as f:
         json.dump(trace, f)
     return trace

@@ -144,6 +144,21 @@ class PoolMonitor:
         if state == self._last:
             return
         self._last = state
+        self._emit(state)
+
+    def flush(self) -> None:
+        """Emit the current state unconditionally — called at serve end so
+        every counter series extends to the trace's final timestamp instead
+        of cutting off at its last *change* (the dedupe above never emits a
+        closing sample on its own)."""
+        if not self.rec:
+            return
+        a = self.alloc
+        state = (a.free_pages, a.pages_in_use, a.high_water, a.alloc_failures)
+        self._last = state
+        self._emit(state)
+
+    def _emit(self, state: tuple) -> None:
         p, t = self.proc, self.track
         self.rec.sample(self.prefix + "free_pages", state[0], proc=p, track=t)
         self.rec.sample(self.prefix + "pages_in_use", state[1], proc=p, track=t)

@@ -224,5 +224,12 @@ class MetricsRegistry:
     def names(self) -> list[str]:
         return sorted(self._metrics)
 
+    def items(self):
+        """Live (name, metric) pairs — cheap iteration WITHOUT serializing
+        aggregates (``as_dict`` computes histogram percentiles; the alert
+        engine's per-tick path must not pay that for metrics it never
+        reads)."""
+        return self._metrics.items()
+
     def as_dict(self) -> dict:
         return {name: m.as_dict() for name, m in sorted(self._metrics.items())}

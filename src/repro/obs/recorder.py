@@ -209,17 +209,29 @@ class Recorder:
 
     def summary(self) -> dict:
         """Everything aggregate: metric dump + event accounting + the
-        recorder's own overhead model."""
+        recorder's own overhead model. When the ring overwrote events the
+        summary says so loudly (``ring`` subdict + a ``warnings`` entry) —
+        a trace built from this recorder is missing its oldest events."""
         kinds: dict[str, int] = {}
         for ev in self.events:
             kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
-        return dict(
+        dropped = self.events.dropped
+        out = dict(
             events=len(self.events),
-            events_dropped=self.events.dropped,
+            events_dropped=dropped,
             event_kinds=kinds,
             self_time_s=self.self_time_s,
+            ring=dict(capacity=self.events.capacity, len=len(self.events),
+                      dropped=dropped),
             metrics=self.metrics.as_dict(),
         )
+        if dropped:
+            out["warnings"] = [
+                f"ring overwrote {dropped} event(s) (capacity "
+                f"{self.events.capacity}); the oldest events are missing — "
+                "grow Recorder(capacity=...) for complete traces"
+            ]
+        return out
 
 
 class _NullRecorder(Recorder):

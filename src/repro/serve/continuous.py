@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,8 @@ import numpy as np
 
 from repro.core.masking import FaultContext, healthy
 from repro.models import model as M
+from repro.obs.alerts import AlertEngine, AlertRule
+from repro.obs.health import HealthConfig, HealthTracker
 from repro.obs.hooks import PoolMonitor, RequestTracer
 from repro.obs.recorder import NULL_RECORDER, Recorder
 from repro.serve.bucketing import (
@@ -129,6 +131,7 @@ class ServeStats:
     decode_dispatches: int = 0
     prefill_dispatches: int = 0  # packed-bucket + chunk dispatches
     chunk_dispatches: int = 0  # chunked-prefill subset of the above
+    probe_dispatches: int = 0  # ABFT canary/structured probe GEMMs
     emitted_tokens: int = 0
     admitted: int = 0
     num_slots: int = 0
@@ -148,6 +151,7 @@ class ServeStats:
             decode_dispatches=self.decode_dispatches,
             prefill_dispatches=self.prefill_dispatches,
             chunk_dispatches=self.chunk_dispatches,
+            probe_dispatches=self.probe_dispatches,
             emitted_tokens=self.emitted_tokens,
             admitted=self.admitted,
             num_slots=self.num_slots,
@@ -314,6 +318,9 @@ class ContinuousBatchingEngine:
         chunk_size: Optional[int] = None,
         max_pack: int = 4,
         recorder: Optional[Recorder] = None,
+        probe_every: Optional[int] = None,
+        health_config: Optional[HealthConfig] = None,
+        alert_rules: Optional[Sequence[AlertRule]] = None,
     ):
         if cfg.has_ssm:
             raise ValueError(
@@ -373,6 +380,72 @@ class ContinuousBatchingEngine:
         # _cache_size() then counts traffic-time compiles)
         self._aot: dict = {}
         self.used_programs: set = set()
+        # fault detection (ROADMAP item 2): an ABFT prober dispatched every
+        # probe_every decode dispatches, feeding the health state machine
+        # and the alert engine. Probes are SEPARATE dispatches through a
+        # separate jitted program (outside compile_counts()/used_programs)
+        # and never touch the serve loop's carried state or key stream, so
+        # the PR-8 guarantee holds: enabling them changes no sampled token.
+        if probe_every is not None and probe_every < 1:
+            raise ValueError(f"probe_every must be >= 1, got {probe_every}")
+        self.probe_every = int(probe_every) if probe_every else None
+        self.prober = None
+        self.health: Optional[HealthTracker] = None
+        self.alerts = AlertEngine(self.obs, alert_rules) if alert_rules else None
+        if self.probe_every:
+            self._init_prober(health_config)
+
+    def _init_prober(self, health_config: Optional[HealthConfig]) -> None:
+        from repro.kernels.masked_matmul.ops import masked_matmul_checksummed
+        from repro.obs.abft import ChipProber, select_probe_weight
+
+        cfg = self.cfg
+        rows, cols = cfg.array_rows, cfg.array_cols
+        name, w = select_probe_weight(self.params)
+        probe_fn = jax.jit(masked_matmul_checksummed)
+        ones = jnp.ones((rows, cols), jnp.float32)
+        dtype = jnp.dtype(cfg.dtype)
+
+        def dispatch(x):
+            # the LIVE mask: re-read self.ctx so a set_silicon() change is
+            # what the next probe computes through (same shape, no recompile)
+            ok = self.ctx.ok if self.ctx.ok is not None else ones
+            y, chk = probe_fn(jnp.asarray(x, dtype), w, ok)
+            return np.asarray(y), np.asarray(chk)
+
+        self._probe_weight = name
+        # snapshotting compiles the probe program and records goldens under
+        # the believed map — before traffic, so probes never jit mid-serve
+        self.prober = ChipProber(
+            dispatch, array_shape=(rows, cols), k_dim=int(w.shape[0])
+        )
+        self.health = HealthTracker(
+            1, self.obs, config=health_config, proc="serve"
+        )
+
+    def set_silicon(self, ctx: FaultContext) -> None:
+        """Simulate a mid-flight silicon change: swap the LIVE fault context
+        every subsequent dispatch (decode, prefill, probes) computes
+        through, WITHOUT rebasing the prober's golden snapshots — so the
+        next probe sees the divergence. The engine must have been built
+        with an ACTIVE context of the same mask shape (a zero-fault
+        ``FaultMap`` context models pristine silicon): the AOT executables
+        were compiled for that pytree structure and an ok=None ↔ ok=array
+        flip would be a different program."""
+        cur = self.ctx
+        if cur.ok is None or ctx is None or ctx.ok is None:
+            raise ValueError(
+                "set_silicon needs ACTIVE fault contexts on both sides; "
+                "construct the engine with an explicit (possibly zero-fault)"
+                " FaultMap context so the mask is a live program input"
+            )
+        if cur.mode != ctx.mode or tuple(cur.ok.shape) != tuple(ctx.ok.shape):
+            raise ValueError(
+                f"silicon change must keep mode/shape: have "
+                f"{cur.mode}/{tuple(cur.ok.shape)}, "
+                f"got {ctx.mode}/{tuple(ctx.ok.shape)}"
+            )
+        self.ctx = ctx
 
     # -- jitted pieces ------------------------------------------------------
 
@@ -518,10 +591,13 @@ class ContinuousBatchingEngine:
         temperature: float = 0.0,
         eos_id: Optional[int] = None,
         key: Optional[jax.Array] = None,
+        on_step: Optional[Callable[[int], None]] = None,
     ) -> tuple[dict[int, RequestOutput], ServeStats]:
         """Serve a request stream to completion. Returns (outputs by rid,
         stats). Outputs include per-request TTFT, queue wait and finish
-        reason."""
+        reason. ``on_step(clock)`` runs at the top of every scheduler
+        round — the injection hook benchmarks use to flip silicon
+        mid-serve (``set_silicon``)."""
         if not requests:
             return {}, ServeStats(num_slots=self.num_slots, page_size=self.page_size)
         alloc = PageAllocator(self.num_pages, self.page_size)
@@ -615,6 +691,8 @@ class ContinuousBatchingEngine:
 
         clock = 0  # decode-dispatch index
         while not table.done:
+            if on_step is not None:
+                on_step(clock)
             table.stamp_arrivals(clock)
             if rec:
                 for r in table.pending:
@@ -680,15 +758,38 @@ class ContinuousBatchingEngine:
                 tracer.decode_dispatch(t0, t1, n_active=n_active, clock=clock)
                 slot_of = {r.rid: s for s, r in enumerate(table.slots)
                            if r is not None}
+            if self.health is not None:
+                msk = table.active  # the mask this dispatch computed under
+                self.health.observe_decode(
+                    0, clock=clock,
+                    mean_logprob=float(lp[msk].mean()) if msk.any() else None,
+                    alloc_failures=alloc.alloc_failures,
+                )
             retired = table.record_step(em, lp, ac, clock, eos_id=eos_id)
             if rec and retired:
                 t1 = rec.now()
                 for rid in retired:
                     tracer.retired(table.outputs[rid], slot_of[rid], t1)
                 pool.sample()
+            if self.prober is not None and clock % self.probe_every == 0:
+                t0p = rec.now() if rec else 0.0
+                res = self.prober.probe(clock=clock)
+                stats.probe_dispatches += res.dispatches
+                if rec:
+                    rec.span("probe", proc="serve", track="health",
+                             t0=t0p, t1=rec.now(), args=res.as_dict())
+                    rec.count("probe.dispatches", res.dispatches)
+                self.health.observe_probe(0, res, clock=clock)
+                if self.alerts:
+                    self.alerts.evaluate(clock=clock)
         stats.peak_resident_kv_bytes = max(
             stats.peak_resident_kv_bytes, alloc.peak_pages * self._page_bytes
         )
+        pool.flush()  # close the counter series at the final timestamp
+        if self.health is not None:
+            self.health.finalize()
+        if self.alerts:
+            self.alerts.evaluate(clock=clock)
         if rec:
             cc = self.compile_counts()
             rec.gauge_set("serve.compiles.aot", cc["aot"])

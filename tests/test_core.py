@@ -303,3 +303,43 @@ def test_fault_context_masks_only_in_fap_mode():
     y_fap = fault_linear(x, w, from_fault_map(fm))
     assert float(y_healthy[0, 0]) == 8.0
     assert float(jnp.max(y_fap)) < 8.0
+
+
+# ---------------------------------------------------------------------------
+# FaultMap edges: merge validation, overlap extremes, pristine round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_fault_map_merge_rejects_shape_mismatch():
+    a = random_fault_map(0, 8, 8, 0.1)
+    b = random_fault_map(1, 16, 16, 0.1)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        a.merge(b)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        _ = a | b
+
+
+def test_overlap_rate_extremes():
+    faulty = np.zeros((8, 8), bool)
+    faulty[0] = True
+    a = FaultMap(faulty)
+    other = np.zeros((8, 8), bool)
+    other[1] = True
+    b = FaultMap(other)
+    assert overlap_rate(a, b) == 0.0  # disjoint: Pr_{A AND B} = 0
+    assert overlap_rate(a, a) == a.fault_rate  # identical: full overlap
+    merged = a.merge(b)
+    assert merged.fault_rate == pytest.approx(
+        a.fault_rate + b.fault_rate - overlap_rate(a, b)
+    )  # Eq. 3 holds exactly on measured maps
+
+
+def test_all_healthy_fault_map_round_trip(tmp_path):
+    fm = FaultMap(np.zeros((8, 8), bool), chip_id="pristine")
+    assert fm.num_faults == 0 and fm.fault_rate == 0.0
+    assert np.all(fm.ok_mask == 1.0)
+    p = tmp_path / "fm"
+    fm.save(p)
+    back = FaultMap.load(p)
+    assert back.chip_id == "pristine"
+    assert np.array_equal(back.faulty, fm.faulty) and back.num_faults == 0

@@ -1,0 +1,674 @@
+"""Online fault-detection tests: ABFT probes, health scoring, alerts.
+
+Contracts pinned here:
+* the numpy syndrome math is exact against the weight-stationary mapping:
+  a fault at PE (rho, c) perturbs only output columns b % C == c through
+  weight rows a % R == rho, and folding the syndrome mod C recovers (rho, c);
+* ``masked_matmul_checksummed`` returns the same payload as
+  ``masked_matmul`` bitwise and a checksum row equal to the column sums
+  (up to float reassociation), through the interpreted Pallas kernel too;
+* ``ChipProber`` is structurally zero-false-positive (healthy probes are
+  bitwise identical to their golden snapshot) and reconstructs an injected
+  delta that matches ``core/faults.py`` ground truth exactly;
+* the health state machine debounces healthy -> suspect -> degraded on
+  probe evidence only (soft drift transitions require an explicit
+  ``drift_z`` opt-in) and recovers on a clean streak;
+* the alert engine fires/resolves with for_ticks debounce, aggregates
+  glob matches, reads histogram percentile fields lazily, and treats
+  missing metrics as inactive;
+* enabling probes on the serving engines changes ZERO sampled tokens and
+  never false-positives on healthy silicon, while a mid-serve
+  ``set_silicon`` injection is detected within a bounded number of decode
+  dispatches with a localized delta — per chip, without perturbing the
+  rest of the fleet;
+* dropped-ring accounting surfaces in Recorder.summary / read_jsonl /
+  validate_chrome_trace, and PoolMonitor.flush closes counter series.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduce_config
+from repro.core import FaultMap, from_fault_map, healthy, random_fault_map
+from repro.models import model as M
+from repro.obs import (
+    DEGRADED,
+    HEALTHY,
+    SUSPECT,
+    AlertEngine,
+    AlertRule,
+    ChipHealth,
+    ChipProber,
+    HealthConfig,
+    HealthTracker,
+    Recorder,
+    chrome_trace,
+    detection_rules,
+    read_jsonl,
+    validate_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.abft import (
+    ProbeResult,
+    fold_syndrome,
+    make_structured_probe,
+    periodic_mask_np,
+    reconstruct_delta,
+    select_probe_weight,
+)
+from repro.obs.health import DriftDetector, Ewma
+from repro.serve import ContinuousBatchingEngine, PageAllocator, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduce_config(get_arch("smollm-135m"))
+    params, _ = M.init_params(cfg, KEY)
+    return cfg, params
+
+
+def _prompt(cfg, seed, n):
+    return np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, seed), (n,), 0, cfg.vocab_size
+    ))
+
+
+def _zero_map(r, c):
+    return FaultMap(np.zeros((r, c), bool))
+
+
+# ---------------------------------------------------------------------------
+# syndrome math (pure numpy)
+# ---------------------------------------------------------------------------
+
+
+def test_periodic_mask_np_matches_core_mapping():
+    from repro.core.mapping import periodic_mask
+
+    fm = random_fault_map(0, 4, 4, 0.25)
+    ok = ~fm.faulty
+    jm = np.asarray(periodic_mask((10, 11), jax.numpy.asarray(ok, jax.numpy.float32)))
+    nm = periodic_mask_np((10, 11), ok)
+    assert np.array_equal(jm, nm)
+
+
+def test_fault_structure_is_periodic_and_fold_localizes():
+    """A single faulty PE (rho, c) perturbs exactly the columns b % C == c,
+    and only through weight rows a % R == rho — folding the syndrome mod C
+    lands it back on column c."""
+    rng = np.random.default_rng(1)
+    R, C, K, N = 4, 4, 12, 10
+    W = rng.standard_normal((K, N))
+    x = rng.standard_normal((3, K))
+    ok = np.ones((R, C), bool)
+    y0 = x @ (W * periodic_mask_np(W.shape, ok))
+    ok[2, 1] = False
+    y1 = x @ (W * periodic_mask_np(W.shape, ok))
+    diff_cols = np.nonzero(np.abs(y1 - y0).max(axis=0) > 0)[0]
+    assert set(diff_cols % C) == {1}
+    folded = fold_syndrome((y1 - y0)[0], C)
+    assert folded.shape == (C,)
+    assert folded[1] > 0 and np.all(folded[np.arange(C) != 1] == 0)
+    # inputs avoiding the faulty PE's weight rows (a % R == 2) see no fault
+    x_masked = x.copy()
+    x_masked[:, np.arange(K) % R == 2] = 0.0
+    healthy_y = x_masked @ (W * periodic_mask_np(W.shape, np.ones((R, C), bool)))
+    assert np.allclose(x_masked @ (W * periodic_mask_np(W.shape, ok)), healthy_y)
+
+
+def test_fold_syndrome_pads_ragged_tails():
+    s = np.zeros(10)
+    s[9] = 3.0  # N=10, C=4: column 9 folds onto PE col 1
+    folded = fold_syndrome(s, 4)
+    assert folded.tolist() == [0.0, 3.0, 0.0, 0.0]
+
+
+def test_structured_probe_row_support():
+    x = make_structured_probe(k_dim=13, rows=4)
+    assert x.shape == (4, 13)
+    for rho in range(4):
+        support = np.nonzero(x[rho])[0]
+        assert np.all(support % 4 == rho)
+        assert np.all(x[rho][support] >= 0.5)  # no cancellation by design
+    # every weight row is covered by exactly one probe row
+    assert int((x != 0).sum()) == 13
+
+
+def test_reconstruct_delta_matches_fault_map_ground_truth():
+    rng = np.random.default_rng(2)
+    R, C, K, N = 8, 8, 32, 24
+    W = rng.standard_normal((K, N)).astype(np.float32)
+    probe = make_structured_probe(K, R)
+    believed = random_fault_map(3, R, C, 0.05)
+    truth = believed.merge(random_fault_map(4, R, C, 0.08))
+    gold = probe @ (W * periodic_mask_np(W.shape, ~believed.faulty))
+    live = probe @ (W * periodic_mask_np(W.shape, ~truth.faulty))
+    delta = reconstruct_delta(gold, live, C, tol=1e-5)
+    assert np.array_equal(delta, truth.faulty & ~believed.faulty)
+
+
+# ---------------------------------------------------------------------------
+# probe weight selection
+# ---------------------------------------------------------------------------
+
+
+def test_select_probe_weight_slices_layer_stacked_params(served_model):
+    _, params = served_model
+    name, w = select_probe_weight(params)
+    assert w.ndim == 2  # layer-stacked leaves contribute one (K, N) slice
+    assert min(w.shape) > 1
+    assert any(k in name for k in ("wq", "wk", "wv", "wo", "wg", "wu", "wd",
+                                   "wi", "lm_head", "in_proj", "out_proj"))
+
+
+def test_select_probe_weight_rejects_unmaskable_params():
+    with pytest.raises(ValueError, match="maskable"):
+        select_probe_weight({"bias": np.zeros(4), "scale": np.ones(3)})
+
+
+# ---------------------------------------------------------------------------
+# checksummed kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("interpret", [None, True])
+def test_masked_matmul_checksummed_parity_and_identity(interpret):
+    from repro.kernels.masked_matmul.ops import masked_matmul, masked_matmul_checksummed
+
+    rng = np.random.default_rng(5)
+    x = jax.numpy.asarray(rng.standard_normal((6, 16)).astype(np.float32))
+    w = jax.numpy.asarray(rng.standard_normal((16, 12)).astype(np.float32))
+    ok = jax.numpy.asarray((~random_fault_map(6, 4, 4, 0.2).faulty), jax.numpy.float32)
+    y, chk = masked_matmul_checksummed(x, w, ok, interpret=interpret)
+    y_ref = masked_matmul(x, w, ok, interpret=interpret)
+    # the payload went through the same masked path: bitwise equal
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    # ABFT identity: the checksum row is the column sum (float reassociation)
+    np.testing.assert_allclose(
+        np.asarray(chk), np.asarray(y).sum(axis=0), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_checksummed_syndrome_localizes_under_silicon_change():
+    """The believed-map golden vs the true-silicon live checksum row
+    diverges exactly on the faulty PE columns mod C."""
+    from repro.kernels.masked_matmul.ops import masked_matmul_checksummed
+
+    rng = np.random.default_rng(7)
+    C = 4
+    x = jax.numpy.asarray(rng.standard_normal((5, 16)).astype(np.float32))
+    w = jax.numpy.asarray(rng.standard_normal((16, 12)).astype(np.float32))
+    believed = np.ones((4, C), bool)
+    true = believed.copy()
+    true[1, 3] = False
+    _, chk_gold = masked_matmul_checksummed(
+        x, w, jax.numpy.asarray(believed, jax.numpy.float32))
+    _, chk_live = masked_matmul_checksummed(
+        x, w, jax.numpy.asarray(true, jax.numpy.float32))
+    folded = fold_syndrome(np.asarray(chk_live, np.float64)
+                           - np.asarray(chk_gold, np.float64), C)
+    assert folded[3] > 1e-5
+    assert np.all(folded[np.arange(C) != 3] <= 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ChipProber against a numpy silicon model
+# ---------------------------------------------------------------------------
+
+
+def _silicon(W, ok_ref):
+    """Numpy stand-in for the jitted checksummed dispatch; reads the LIVE
+    ok array through the closure like the engines re-read self.ctx."""
+    def dispatch(x):
+        m = periodic_mask_np(W.shape, ok_ref)
+        y = (np.asarray(x, np.float64) @ (W * m)).astype(np.float32)
+        chk = (np.asarray(x, np.float64).sum(axis=0) @ (W * m)).astype(np.float32)
+        return y, chk
+    return dispatch
+
+
+def test_prober_healthy_probes_are_bitwise_zero_false_positive():
+    rng = np.random.default_rng(8)
+    W = rng.standard_normal((24, 20)).astype(np.float32)
+    ok = np.ones((4, 4), bool)
+    prober = ChipProber(_silicon(W, ok), array_shape=(4, 4), k_dim=24)
+    for clock in range(50):
+        res = prober.probe(clock=clock)
+        assert not res.detected and res.canary_mismatches == 0
+        assert res.dispatches == 1  # structured probe only spent on divergence
+        assert res.delta is None and res.clock == clock
+
+
+def test_prober_localizes_injected_faults_and_rebases():
+    rng = np.random.default_rng(9)
+    R, C = 8, 8
+    W = rng.standard_normal((32, 24)).astype(np.float32)
+    believed = random_fault_map(10, R, C, 0.06)
+    ok = ~believed.faulty  # mutated in place below: the live silicon
+    prober = ChipProber(_silicon(W, ok), array_shape=(R, C), k_dim=32, chip=3)
+    assert not prober.probe(clock=0).detected
+    truth = believed.merge(random_fault_map(11, R, C, 0.1))
+    new = truth.faulty & ~believed.faulty
+    assert new.any()
+    ok &= ~truth.faulty  # silicon degrades under the prober
+    res = prober.probe(clock=1)
+    assert res.detected and res.dispatches == 2 and res.chip == 3
+    assert np.array_equal(res.delta, new)  # exact ground-truth localization
+    assert res.delta_faults == int(new.sum())
+    d = res.as_dict()
+    assert d["detected"] and d["delta_faults"] == int(new.sum()) and d["chip"] == 3
+    prober.rebase()  # recovery adopted the new map: clean again
+    assert not prober.probe(clock=2).detected
+
+
+def test_prober_validates_array_shape():
+    with pytest.raises(ValueError, match="shape"):
+        ChipProber(lambda x: (x, x[0]), array_shape=(0, 4), k_dim=8)
+
+
+# ---------------------------------------------------------------------------
+# health primitives + state machine
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_seeds_on_first_sample():
+    e = Ewma(alpha=0.5)
+    assert e.update(10.0) == 10.0  # seeded, not pulled toward the 0.0 init
+    assert e.update(0.0) == 5.0
+
+
+def test_drift_detector_zero_in_warmup_then_flags_level_shift():
+    d = DriftDetector(alpha=0.05, warmup=8)
+    zs = [d.update(-1.0) for _ in range(20)]
+    assert all(z == 0.0 for z in zs[:8]) and all(abs(z) < 1.0 for z in zs)
+    assert abs(d.update(-9.0)) > 3.0  # a real level shift stands out
+
+
+def _probe_result(detected, mism=0, cols=8, delta=None, chip=0):
+    return ProbeResult(
+        canary_mismatches=mism,
+        syndrome_cols=np.full(cols, 1.0 if detected else 0.0),
+        detected=detected,
+        dispatches=2 if detected else 1,
+        delta=delta,
+        chip=chip,
+    )
+
+
+def test_chip_health_debounce_degrade_and_recover():
+    cfg = HealthConfig(suspect_after=2, degraded_after=4, recover_after=3)
+    h = ChipHealth(0, cfg)
+    bad, clean = _probe_result(True, mism=5), _probe_result(False)
+    assert h.observe_probe(bad, clock=0) is None  # one bad probe: no move
+    assert h.state == HEALTHY
+    moved = h.observe_probe(bad, clock=1)
+    assert moved == (1, HEALTHY, SUSPECT, "probe")
+    assert h.detections == 1 and h.detected_at == 1
+    h.observe_probe(bad, clock=2)
+    moved = h.observe_probe(bad, clock=3)  # 4th consecutive: degraded
+    assert moved == (3, SUSPECT, DEGRADED, "probe") and h.state == DEGRADED
+    for clock in (4, 5):
+        assert h.observe_probe(clean, clock=clock) is None
+    moved = h.observe_probe(clean, clock=6)  # 3rd consecutive clean
+    assert moved == (6, DEGRADED, HEALTHY, "recovered")
+    assert h.detections == 1  # recovery is not a second detection
+    assert h.score.value < 1.0  # the bad stretch dented the score
+    s = h.summary()
+    assert [t["to"] for t in s["transitions"]] == [SUSPECT, DEGRADED, HEALTHY]
+
+
+def test_chip_health_drift_transitions_only_when_opted_in():
+    # default config: soft evidence moves the score, never the state
+    h = ChipHealth(0, HealthConfig())
+    for clock in range(30):
+        lp = -1.0 if clock < 15 else -50.0
+        assert h.observe_decode(clock=clock, mean_logprob=lp) is None
+    assert h.state == HEALTHY
+    # drift_z set: sustained drift raises suspect on its own
+    h2 = ChipHealth(0, HealthConfig(drift_z=3.0, drift_after=3))
+    moved = None
+    for clock in range(30):
+        lp = -1.0 if clock < 15 else -50.0
+        moved = moved or h2.observe_decode(clock=clock, mean_logprob=lp)
+    assert moved is not None and moved[2] == SUSPECT and moved[3] == "logit-drift"
+
+
+def test_chip_health_backpressure_dents_score():
+    h = ChipHealth(0, HealthConfig())
+    h.observe_decode(clock=0, alloc_failures=0)
+    base = h.score.value
+    for clock in range(1, 8):
+        h.observe_decode(clock=clock, alloc_failures=clock)  # failing every tick
+    assert h.score.value < base and h.state == HEALTHY
+
+
+def test_health_tracker_records_gauges_transitions_and_detections():
+    rec = Recorder()
+    t = HealthTracker(2, rec, config=HealthConfig(suspect_after=1), proc="fleet")
+    delta = np.zeros((4, 4), bool)
+    delta[1, 2] = True
+    t.observe_probe(1, _probe_result(True, mism=2, delta=delta, chip=1), clock=5)
+    assert t.state(1) == SUSPECT and t.state(0) == HEALTHY
+    assert t.detections == 1 and t.detected_at(1) == 5
+    assert np.array_equal(t.last_delta(1), delta)
+    evs = rec.event_list()
+    assert any(e.name == "health.transition" for e in evs)
+    det = [e for e in evs if e.name == "fault.detected"]
+    assert len(det) == 1 and det[0].args["chip"] == 1 and det[0].args["delta_faults"] == 1
+    assert det[0].track == "chip1/health"  # per-chip swimlane
+    assert rec.metrics.counter("health.detections").value == 1
+    assert rec.metrics.gauge("health.chip1.state").value == 1
+    before = len(rec.event_list())
+    t.finalize()  # closing gauge samples for EVERY chip
+    assert len(rec.event_list()) == before + 4
+    s = t.summary()
+    assert s["detections"] == 1 and s["states"] == {0: HEALTHY, 1: SUSPECT}
+    assert s["chips"][1]["delta_coords"] == [[1, 2]]
+    with pytest.raises(ValueError):
+        HealthTracker(0)
+
+
+# ---------------------------------------------------------------------------
+# alert engine
+# ---------------------------------------------------------------------------
+
+
+def test_alert_rule_validation():
+    with pytest.raises(ValueError, match="op"):
+        AlertRule("r", "m", "!=", 1.0)
+    with pytest.raises(ValueError, match="agg"):
+        AlertRule("r", "m", ">", 1.0, agg="avg")
+    with pytest.raises(ValueError, match="for_ticks"):
+        AlertRule("r", "m", ">", 1.0, for_ticks=0)
+    with pytest.raises(ValueError, match="field"):
+        AlertRule("r", "m", ">", 1.0, field="p42")
+    with pytest.raises(ValueError, match="severity"):
+        AlertRule("r", "m", ">", 1.0, severity="meh")
+    with pytest.raises(ValueError, match="duplicate"):
+        AlertEngine(Recorder(), [AlertRule("r", "m", ">", 1.0),
+                                 AlertRule("r", "m2", ">", 1.0)])
+
+
+def test_alert_fire_resolve_debounce_and_instants():
+    rec = Recorder()
+    eng = AlertEngine(rec, [AlertRule("hot", "temp", ">", 10.0, for_ticks=2)])
+    rec.gauge_set("temp", 50.0)
+    assert eng.evaluate(clock=0) == []  # debounce holds the first breach
+    assert eng.evaluate(clock=1) == ["hot"]
+    assert eng.firing() == ["hot"]
+    assert eng.evaluate(clock=2) == []  # still breaching, not NEWLY fired
+    rec.gauge_set("temp", 1.0)
+    eng.evaluate(clock=3)
+    assert eng.firing() == [] and eng.fired_total == 1
+    s = eng.summary()
+    assert s["fired"] == ["hot"]  # history survives the resolve
+    states = [e.args["state"] for e in rec.event_list() if e.name == "alert"]
+    assert states == ["firing", "resolved"]
+    assert rec.metrics.counter("alerts.fired").value == 1
+    assert rec.metrics.counter("alerts.resolved").value == 1
+    assert rec.metrics.gauge("alerts.firing").value == 0
+
+
+def test_alert_glob_agg_histogram_fields_and_missing_metrics():
+    rec = Recorder()
+    eng = AlertEngine(rec, [
+        AlertRule("fleet.suspect", "health.chip*.state", ">=", 1.0, agg="max"),
+        AlertRule("slow", "lat", ">", 0.5, field="p99"),
+        AlertRule("ghost", "no.such.metric", ">", 0.0),
+    ])
+    assert eng.evaluate(clock=0) == []  # no data is not a breach
+    rec.sample("health.chip0.state", 0)
+    rec.sample("health.chip1.state", 2)
+    for v in [0.01] * 95 + [2.0] * 5:
+        rec.observe("lat", v, buckets=(0.1, 1.0, 4.0))
+    fired = eng.evaluate(clock=1)
+    assert set(fired) == {"fleet.suspect", "slow"}  # max over glob; real p99
+    assert "ghost" not in eng.summary()["fired"]
+
+
+def test_detection_rules_are_probe_evidence_only():
+    names = {r.metric for r in detection_rules()}
+    assert names == {"health.chip*.state", "health.chip*.score",
+                     "health.detections"}
+    assert all(r.name.startswith(("health.", "detect."))
+               for r in detection_rules())
+
+
+def test_metrics_registry_items_returns_live_objects():
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    c.inc(2)
+    items = dict(reg.items())
+    assert items["n"] is c  # live, not a serialized snapshot
+    c.inc(3)
+    assert items["n"].value == 5
+
+
+# ---------------------------------------------------------------------------
+# engine integration: zero token impact, bounded detection, fleet isolation
+# ---------------------------------------------------------------------------
+
+
+def _reqs(cfg, budget=16):
+    return [
+        Request(0, _prompt(cfg, 0, 6), max_new_tokens=budget),
+        Request(1, _prompt(cfg, 1, 7), max_new_tokens=budget - 4),
+        Request(2, _prompt(cfg, 2, 5), max_new_tokens=budget // 2, arrival=2),
+    ]
+
+
+def _engine(cfg, params, ctx, **kw):
+    return ContinuousBatchingEngine(
+        cfg, params, ctx, num_slots=2, page_size=4, num_pages=64,
+        prefill_buckets=(8, 16), **kw,
+    )
+
+
+def test_probes_change_zero_tokens_and_never_false_positive(served_model):
+    """Extends the PR-8 pin to the detection stack: probes + health + alerts
+    enabled on healthy silicon change no sampled token, detect nothing, and
+    fire no alert."""
+    cfg, params = served_model
+    ctx = from_fault_map(_zero_map(cfg.array_rows, cfg.array_cols))
+    reqs = _reqs(cfg)
+    off, _ = _engine(cfg, params, ctx).serve(reqs)
+    rec = Recorder()
+    eng = _engine(cfg, params, ctx, recorder=rec, probe_every=2,
+                  alert_rules=detection_rules())
+    on, stats = eng.serve(reqs)
+    for rid in off:
+        assert np.array_equal(off[rid].tokens, on[rid].tokens), rid
+        np.testing.assert_array_equal(off[rid].logprobs, on[rid].logprobs)
+    assert stats.probe_dispatches > 0
+    assert eng.health.detections == 0 and eng.health.state(0) == HEALTHY
+    assert eng.alerts.fired_total == 0
+    spans = [e for e in rec.event_list() if e.name == "probe"]
+    assert spans and all(e.track == "health" for e in spans)
+    assert not any(e.args["detected"] for e in spans)
+    assert validate_chrome_trace(chrome_trace(rec)) == []
+
+
+def test_probe_programs_stay_out_of_the_serve_census(served_model):
+    cfg, params = served_model
+    ctx = from_fault_map(_zero_map(cfg.array_rows, cfg.array_cols))
+    plain = _engine(cfg, params, ctx)
+    probed = _engine(cfg, params, ctx, probe_every=2)
+    plain.serve(_reqs(cfg, budget=6))
+    probed.serve(_reqs(cfg, budget=6))
+    assert probed.used_programs == plain.used_programs
+    assert probed.compile_counts() == plain.compile_counts()
+
+
+def test_continuous_injection_detected_bounded_and_localized(served_model):
+    cfg, params = served_model
+    R, C = cfg.array_rows, cfg.array_cols
+    base = _zero_map(R, C)
+    new_map = random_fault_map(42, R, C, 0.05)
+    true_delta = new_map.faulty & ~base.faulty
+    assert true_delta.any()
+    hc = HealthConfig()
+    probe_every, inject_at = 3, 4
+    rec = Recorder()
+    eng = _engine(cfg, params, from_fault_map(base), recorder=rec,
+                  probe_every=probe_every, health_config=hc,
+                  alert_rules=detection_rules())
+    state = dict(injected=False)
+
+    def on_step(clock):
+        if clock >= inject_at and not state["injected"]:
+            state["injected"] = True
+            eng.set_silicon(from_fault_map(new_map))
+
+    outs, _ = eng.serve(_reqs(cfg, budget=28), on_step=on_step)
+    assert state["injected"] and len(outs) == 3
+    assert eng.health.detections >= 1 and eng.health.state(0) != HEALTHY
+    # detection latency: debounce needs suspect_after breaching probes, each
+    # probe_every dispatches apart (+1 tick of probe/injection skew)
+    assert eng.health.detected_at(0) is not None
+    assert eng.health.detected_at(0) <= inject_at + probe_every * (hc.suspect_after + 1)
+    delta = eng.health.last_delta(0)
+    assert delta is not None and delta.any()
+    assert not (delta & ~true_delta).any()  # localized: subset of true faults
+    assert "detect.new_faults" in eng.alerts.summary()["fired"]
+    assert any(e.name == "fault.detected" for e in rec.event_list())
+
+
+def test_fleet_injection_isolated_to_victim_chip(served_model):
+    from repro.fleet import ShardedFleetServeEngine
+
+    cfg, params = served_model
+    R, C = cfg.array_rows, cfg.array_cols
+    base = [_zero_map(R, C), random_fault_map(1, R, C, 0.04)]
+    victim = 1
+    new_map = base[victim].merge(random_fault_map(99, R, C, 0.06))
+    true_delta = new_map.faulty & ~base[victim].faulty
+    assert true_delta.any()
+    streams = [[
+        Request(0, _prompt(cfg, 50 + 10 * c, 6), max_new_tokens=24),
+        Request(1, _prompt(cfg, 51 + 10 * c, 5), max_new_tokens=12, arrival=1),
+    ] for c in range(2)]
+
+    def build(rules, rec=None):
+        return ShardedFleetServeEngine(
+            cfg, [params, params], [from_fault_map(m) for m in base],
+            num_slots=2, page_size=4, num_pages=64, prefill_buckets=(8, 16),
+            probe_every=3, alert_rules=rules, recorder=rec,
+        )
+
+    ctl = build(None)
+    ctl_outs, _ = ctl.serve(streams)  # probes on, no injection: control arm
+    assert ctl.health.detections == 0
+
+    eng = build(detection_rules(), rec=Recorder())
+    state = dict(injected=False)
+
+    def on_step(clock):
+        if clock >= 4 and not state["injected"]:
+            state["injected"] = True
+            eng.set_silicon(victim, from_fault_map(new_map))
+
+    outs, _ = eng.serve(streams, on_step=on_step)
+    assert eng.health.state(victim) != HEALTHY
+    delta = eng.health.last_delta(victim)
+    assert delta is not None and not (delta & ~true_delta).any()
+    # isolation: the healthy chip neither false-positives nor changes tokens
+    assert eng.health.state(0) == HEALTHY and eng.health.detections == 1
+    assert eng.health.last_delta(0) is None
+    for rid in ctl_outs[0]:
+        assert np.array_equal(outs[0][rid].tokens, ctl_outs[0][rid].tokens)
+    assert "detect.new_faults" in eng.alerts.summary()["fired"]
+
+
+def test_set_silicon_validates(served_model):
+    from repro.fleet import ShardedFleetServeEngine
+
+    cfg, params = served_model
+    R, C = cfg.array_rows, cfg.array_cols
+    active = from_fault_map(_zero_map(R, C))
+    lazy = _engine(cfg, params, healthy())
+    with pytest.raises(ValueError, match="ACTIVE"):
+        lazy.set_silicon(active)
+    eng = _engine(cfg, params, active)
+    with pytest.raises(ValueError, match="ACTIVE"):
+        eng.set_silicon(healthy())
+    with pytest.raises(ValueError, match="shape"):
+        eng.set_silicon(from_fault_map(_zero_map(R * 2, C)))
+    fleet = ShardedFleetServeEngine(
+        cfg, [params, params], None, num_slots=2, page_size=4, num_pages=32,
+    )
+    with pytest.raises(ValueError, match="FaultMap context"):
+        fleet.set_silicon(0, active)
+    fleet2 = ShardedFleetServeEngine(
+        cfg, [params, params], [active, active],
+        num_slots=2, page_size=4, num_pages=32,
+    )
+    with pytest.raises(ValueError, match="chip"):
+        fleet2.set_silicon(5, active)
+    with pytest.raises(ValueError, match="shape"):
+        fleet2.set_silicon(0, from_fault_map(_zero_map(R * 2, C)))
+    with pytest.raises(ValueError):
+        _engine(cfg, params, active, probe_every=0)
+
+
+# ---------------------------------------------------------------------------
+# satellite pins: pool flush, dropped-ring surfacing, CLI exit codes
+# ---------------------------------------------------------------------------
+
+
+def test_pool_monitor_flush_closes_the_series():
+    from repro.obs.hooks import PoolMonitor
+
+    rec = Recorder()
+    mon = PoolMonitor(rec, PageAllocator(num_pages=8, page_size=4))
+    mon.sample()
+    mon.sample()  # identical state: deduped
+    assert len([e for e in rec.event_list() if e.name == "kv.free_pages"]) == 1
+    mon.flush()  # unconditional closing sample at serve end
+    assert len([e for e in rec.event_list() if e.name == "kv.free_pages"]) == 2
+
+
+def test_dropped_ring_surfaces_in_summary_jsonl_and_validator(tmp_path):
+    rec = Recorder(capacity=4)
+    for i in range(9):
+        rec.instant(f"e{i}")
+    s = rec.summary()
+    assert s["events_dropped"] == 5
+    assert s["ring"] == dict(capacity=4, len=4, dropped=5)
+    assert any("overwrote" in w for w in s["warnings"])
+    tr = chrome_trace(rec)
+    assert tr["otherData"]["events_dropped"] == 5
+    with pytest.warns(UserWarning, match="overwrote 5"):
+        assert validate_chrome_trace(tr) == []
+    p = tmp_path / "dropped.jsonl"
+    write_jsonl(str(p), rec)
+    back = read_jsonl(str(p))
+    assert back["dropped"] == 5
+    with pytest.warns(UserWarning, match="overwrote 5"):
+        chrome_trace(back["events"], events_dropped=back["dropped"])
+        assert validate_chrome_trace(
+            chrome_trace(back["events"], events_dropped=back["dropped"])) == []
+
+
+def test_obs_summary_check_exits_nonzero_on_fired_alerts(tmp_path, capsys):
+    from repro.launch.obs import main as obs_main
+
+    rec = Recorder()
+    eng = AlertEngine(rec, [AlertRule("hot", "temp", ">", 1.0)])
+    rec.gauge_set("temp", 5.0)
+    eng.evaluate(clock=0)
+    p = tmp_path / "alerted.jsonl"
+    write_jsonl(str(p), rec)
+    assert obs_main(["--summary", str(p)]) == 0  # summary alone reports
+    out = json.loads(capsys.readouterr().out)
+    assert out["alerts"]["fired"] == ["hot"]
+    assert obs_main(["--summary", str(p), "--check"]) == 1  # gate trips
+    clean = tmp_path / "clean.jsonl"
+    write_jsonl(str(clean), Recorder())
+    capsys.readouterr()
+    assert obs_main(["--summary", str(clean), "--check"]) == 0
